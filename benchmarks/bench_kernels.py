@@ -1,0 +1,79 @@
+"""Kernel micro-bench: interpret-mode correctness sweep + jnp-ref timing.
+
+Wall-clock here measures the CPU reference path (the kernels target TPU);
+the deliverable is the allclose margin per kernel across a shape sweep.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main() -> List[str]:
+    lines = ["kernel,config,ref_us_per_call,max_abs_err_vs_ref"]
+
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 512, 8, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 512, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 512, 2, 64), jnp.bfloat16)
+    ref = jax.jit(lambda q, k, v: attention_ref(q, k, v, window=512))
+    us = _time(ref, q, k, v)
+    out = flash_attention(q, k, v, window=512, chunk=128, interpret=True)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - ref(q, k, v).astype(jnp.float32))))
+    lines.append(f"flash_attention,s512_h8kv2_d64,{us:.0f},{err:.4f}")
+
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    q1 = jax.random.normal(ks[0], (2, 1, 8, 64), jnp.bfloat16)
+    kc = jax.random.normal(ks[1], (2, 2048, 2, 64), jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (2, 2048, 2, 64), jnp.bfloat16)
+    ref = jax.jit(lambda q, k, v: decode_attention_ref(q, k, v, 10_000, 1500))
+    us = _time(ref, q1, kc, vc)
+    out = decode_attention(q1, kc, vc, window=10_000, cache_len=1500,
+                           interpret=True)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - ref(q1, kc, vc).astype(jnp.float32))))
+    lines.append(f"decode_attention,kv2048_h8kv2,{us:.0f},{err:.4f}")
+
+    from repro.kernels.moe_gating.ops import topk_gating
+    from repro.kernels.moe_gating.ref import topk_gating_ref
+    logits = jax.random.normal(ks[0], (2048, 60), jnp.float32)
+    ref = jax.jit(lambda l: topk_gating_ref(l, 4))
+    us = _time(ref, logits)
+    w, i = topk_gating(logits, 4, interpret=True)
+    wr, ir = ref(logits)
+    err = float(jnp.max(jnp.abs(w - wr)))
+    lines.append(f"moe_gating,t2048_e60_k4,{us:.0f},{err:.6f}")
+
+    from repro.kernels.linucb.ops import linucb_scores
+    from repro.kernels.linucb.ref import linucb_scores_ref
+    L = jax.random.normal(ks[1], (64, 128, 128)) * 0.1
+    a_inv = jnp.einsum("mij,mkj->mik", L, L) + jnp.eye(128)[None]
+    theta = jax.random.normal(ks[2], (64, 128))
+    x = jax.random.normal(ks[0], (256, 128))
+    ref = jax.jit(lambda a, t, xx: linucb_scores_ref(a, t, xx, 0.1))
+    us = _time(ref, a_inv, theta, x)
+    out = linucb_scores(a_inv, theta, x, 0.1, interpret=True)
+    err = float(jnp.max(jnp.abs(out - ref(a_inv, theta, x))))
+    lines.append(f"linucb_score,m64_d128_q256,{us:.0f},{err:.6f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

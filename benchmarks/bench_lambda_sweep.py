@@ -1,0 +1,43 @@
+"""Paper Fig. 4 / Appendix A.4: accuracy-energy trade-off across λ."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import make_router, run_policy, stream
+from repro.data import OutcomeSimulator
+
+
+def run(lams=(0.0, 0.2, 0.4, 0.6, 0.8, 1.0), per_task: int = 200,
+        n_runs: int = 3):
+    qs = stream(per_task=per_task)
+    rows = []
+    for lam in lams:
+        accs, energies = [], []
+        for run_i in range(n_runs):
+            router = make_router(lam=lam, seed=run_i)
+            sim = OutcomeSimulator(seed=run_i + 100)
+            r = run_policy(router, qs, sim, f"lam{lam}")
+            accs.append(r.mean_accuracy)
+            energies.append(r.total_energy_wh)
+        rows.append((lam, float(np.mean(accs)), float(np.mean(energies))))
+    return rows
+
+
+def main(per_task: int = 200, n_runs: int = 2) -> List[str]:
+    rows = run(per_task=per_task, n_runs=n_runs)
+    lines = ["lambda,mean_norm_accuracy,total_energy_wh"]
+    for lam, acc, e in rows:
+        lines.append(f"{lam:.1f},{acc:.4f},{e:.2f}")
+    accs = [r[1] for r in rows]
+    es = [r[2] for r in rows]
+    mono_acc = all(a >= b - 0.06 for a, b in zip(accs, accs[1:]))
+    mono_e = all(a >= b - 3.0 for a, b in zip(es, es[1:]))
+    lines.append(f"# monotone: accuracy~decreasing={mono_acc} "
+                 f"energy~decreasing={mono_e} (paper Fig. 9)")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,110 @@
+"""Shared simulation harness for the paper-scale benchmarks.
+
+Runs GreenServ (or a baseline policy) over the T=2,500 synthetic stream
+against the 16-model pool with calibrated outcome tables, tracking the same
+quantities the paper plots: mean normalized accuracy, total energy (Wh),
+cumulative regret (vs. the per-step oracle over mean tables), selection
+frequencies, and overhead timings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.pool import build_paper_pool
+from repro.core.context import ContextGenerator
+from repro.core.router import GreenServRouter
+from repro.core.types import Feedback, Query, RouterConfig
+from repro.data import ENERGY_SCALE_WH, OutcomeSimulator
+from repro.data.stream import labeled_sample, make_stream
+
+
+@dataclasses.dataclass
+class RunResult:
+    name: str
+    mean_accuracy: float
+    total_energy_wh: float
+    cumulative_regret: float
+    regret_curve: np.ndarray
+    selections: np.ndarray
+    selection_trace: np.ndarray
+    mean_decision_ms: float
+    feature_ms: Dict[str, float]
+
+
+def make_router(lam: float = 0.4, algorithm: str = "linucb",
+                features=(True, True, True), seed: int = 0,
+                exclude: Optional[List[str]] = None) -> GreenServRouter:
+    cfg = RouterConfig(lam=lam, algorithm=algorithm, seed=seed,
+                       energy_scale_wh=ENERGY_SCALE_WH, max_arms=32)
+    pool = build_paper_pool(exclude=exclude)
+    router = GreenServRouter(cfg, pool)
+    router.context.set_features(*features)
+    if features[0]:
+        texts, labels = labeled_sample(n_per_task=40, seed=seed + 1)
+        router.context.task_classifier.fit(texts, labels, steps=150)
+    return router
+
+
+def run_policy(router: Optional[GreenServRouter], queries: Sequence[Query],
+               sim: OutcomeSimulator, name: str,
+               static_model: Optional[str] = None,
+               random_seed: Optional[int] = None,
+               add_model_at: Optional[int] = None,
+               add_model_name: Optional[str] = None) -> RunResult:
+    """router=None + static_model/random_seed runs the paper's baselines."""
+    pool = router.pool if router else build_paper_pool()
+    names = pool.names
+    rng = np.random.default_rng(random_seed or 0)
+    accs: List[float] = []
+    energy = 0.0
+    regret_hist: List[float] = []
+    selections = np.zeros(32, np.int64)
+    trace = np.zeros(len(queries), np.int16)
+
+    for t, q in enumerate(queries):
+        if router and add_model_at is not None and t == add_model_at:
+            from repro.configs.pool import make_profile, PAPER_POOL
+            row = next(r for r in PAPER_POOL if r[0] == add_model_name)
+            pool.add(make_profile(*row))
+            names = pool.names
+        if router is not None:
+            decision = router.route(q)
+            m_idx = decision.model_index
+        elif static_model is not None:
+            m_idx = names.index(static_model)
+        else:
+            m_idx = int(rng.integers(len(names)))
+        model = names[m_idx]
+        acc, e_wh, lat, _ = sim(q, model)
+        accs.append(acc)
+        energy += e_wh
+        selections[m_idx] += 1
+        trace[t] = m_idx
+        # oracle regret over the mean tables (Eq. 6-8)
+        acc_tab, e_tab = sim.oracle_tables(names, q.task)
+        lam = router.config.lam if router else 0.4
+        rewards = (1 - lam) * acc_tab - lam * e_tab / ENERGY_SCALE_WH
+        chosen_mean = rewards[m_idx]
+        regret_hist.append(float(rewards.max() - chosen_mean))
+        if router is not None:
+            router.feedback(Feedback(query_uid=q.uid, model_index=m_idx,
+                                     accuracy=acc, energy_wh=e_wh,
+                                     latency_ms=lat))
+    feature_ms = router.context.mean_overhead_ms() if router else {}
+    return RunResult(
+        name=name, mean_accuracy=float(np.mean(accs)),
+        total_energy_wh=energy,
+        cumulative_regret=float(np.sum(regret_hist)),
+        regret_curve=np.cumsum(regret_hist),
+        selections=selections[: len(names)],
+        selection_trace=trace,
+        mean_decision_ms=router.mean_decision_ms if router else 0.0,
+        feature_ms=feature_ms)
+
+
+def stream(per_task: int = 500, seed: int = 0):
+    return make_stream(per_task=per_task, seed=seed)

@@ -1,0 +1,56 @@
+"""§Roofline table: aggregates the dry-run JSON records per (arch × shape).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List
+
+
+def load_records(directory: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for p in sorted(pathlib.Path(directory).glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def table(directory: str = "experiments/dryrun") -> List[str]:
+    lines = ["arch,shape,mesh,status,peak_GiB,tpu_est_GiB,t_compute_s,"
+             "t_memory_s,t_collective_s,bottleneck,roofline_fraction,"
+             "model_vs_hlo,energy_Wh_per_step"]
+    for r in load_records(directory):
+        if r.get("skipped"):
+            lines.append(f"{r['arch']},{r['shape']},{r.get('mesh','-')},"
+                         f"SKIP(sub-quadratic-only),,,,,,,,,")
+            continue
+        if "error" in r:
+            lines.append(f"{r['arch']},{r['shape']},{r.get('mesh','-')},"
+                         f"ERROR,,,,,,,,,")
+            continue
+        status = ("OK" if r.get("fits_hbm") else
+                  "OK*(tpu-corrected)" if r.get("fits_hbm_tpu_est")
+                  else "OOM")
+        tpu = r.get("peak_bytes_tpu_est", "")
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},{status},"
+            f"{r['peak_bytes_per_dev']/2**30:.2f},"
+            f"{(tpu/2**30 if tpu else 0):.2f},"
+            f"{r['t_compute_s']:.4g},{r['t_memory_s']:.4g},"
+            f"{r['t_collective_s']:.4g},{r['bottleneck']},"
+            f"{r['roofline_fraction']:.4f},{r['model_vs_hlo']:.3f},"
+            f"{r['energy_wh_per_step']:.4g}")
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    print("\n".join(table(args.dir)))
+
+
+if __name__ == "__main__":
+    main()

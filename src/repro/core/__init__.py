@@ -1,0 +1,23 @@
+"""GreenServ core: contextual-bandit routing for multi-model LLM inference."""
+from repro.core.bandits import BanditPolicy, BanditState, add_arm, init_state
+from repro.core.context import (ContextGenerator, FleschComplexity,
+                                OnlineKMeans, TaskClassifier,
+                                flesch_reading_ease)
+from repro.core.embedding import EmbeddingModel
+from repro.core.energy import (CostModelParams, EnergyMonitor, RooflineTerms,
+                               energy_joules, energy_wh, roofline)
+from repro.core.pool import ModelPool
+from repro.core.rewards import RegretTracker, RewardManager, scalarize
+from repro.core.router import GreenServRouter
+from repro.core.types import (ContextVector, Feedback, ModelProfile, Query,
+                              RouteDecision, RouterConfig, TaskType)
+
+__all__ = [
+    "BanditPolicy", "BanditState", "add_arm", "init_state",
+    "ContextGenerator", "FleschComplexity", "OnlineKMeans", "TaskClassifier",
+    "flesch_reading_ease", "EmbeddingModel",
+    "CostModelParams", "EnergyMonitor", "RooflineTerms", "energy_joules",
+    "energy_wh", "roofline", "ModelPool", "RegretTracker", "RewardManager",
+    "scalarize", "GreenServRouter", "ContextVector", "Feedback",
+    "ModelProfile", "Query", "RouteDecision", "RouterConfig", "TaskType",
+]

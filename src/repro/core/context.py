@@ -1,0 +1,292 @@
+"""Query Context Generator (paper §4.2).
+
+Three feature extractors feed the context vector x_t = [l_t, c_t, p_t]:
+
+  * TaskClassifier   — logistic regression over instruction embeddings (§4.2.1)
+  * OnlineKMeans     — cosine-assignment online k-means over full-query
+                       embeddings with incremental centroid updates (§4.2.2,
+                       Eq. 9–10)
+  * FleschComplexity — Flesch Reading Ease (Eq. 11) + equal-width binning
+                       (§4.2.3)
+
+Categorical features are one-hot encoded with an intercept appended (§4.2.4):
+d = N_tasks + K + N_bins + 1.
+"""
+from __future__ import annotations
+
+import re
+import time
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding import EmbeddingModel, tokenize
+from repro.core.types import ContextVector, N_TASKS, RouterConfig
+
+# ---------------------------------------------------------------------------
+# Task classifier: LR over embeddings, trained with full-batch Adam in JAX.
+# ---------------------------------------------------------------------------
+
+
+def _lr_loss(params, x, y, n_classes, l2=1e-4):
+    w, b = params
+    logits = x @ w + b
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    return nll + l2 * jnp.sum(w * w)
+
+
+@jax.jit
+def _lr_predict_logits(w, b, x):
+    return x @ w + b
+
+
+class TaskClassifier:
+    """Lightweight LR task-type classifier (paper §4.2.1).
+
+    The instruction text is taken from the first lines of the prompt,
+    embedded, and classified into one of N_TASKS labels.
+    """
+
+    def __init__(self, embedder: EmbeddingModel, n_classes: int = N_TASKS,
+                 instr_lines: int = 2, seed: int = 0):
+        self.embedder = embedder
+        self.n_classes = n_classes
+        self.instr_lines = instr_lines
+        rng = np.random.default_rng(seed)
+        self.w = jnp.asarray(rng.standard_normal((embedder.dim, n_classes)) * 0.01,
+                             dtype=jnp.float32)
+        self.b = jnp.zeros((n_classes,), dtype=jnp.float32)
+        self._trained = False
+
+    def instruction_text(self, text: str) -> str:
+        lines = [ln for ln in text.splitlines() if ln.strip()]
+        return " ".join(lines[: self.instr_lines]) if lines else text
+
+    def fit(self, texts: Sequence[str], labels: Sequence[int],
+            steps: int = 300, lr: float = 0.05) -> float:
+        """Train with full-batch Adam; returns final training accuracy."""
+        x = jnp.asarray(self.embedder.encode_batch(
+            [self.instruction_text(t) for t in texts]))
+        y = jnp.asarray(np.asarray(labels, dtype=np.int32))
+        params = (self.w, self.b)
+        m = jax.tree.map(jnp.zeros_like, params)
+        v = jax.tree.map(jnp.zeros_like, params)
+        loss_grad = jax.jit(jax.value_and_grad(
+            lambda p: _lr_loss(p, x, y, self.n_classes)))
+
+        @jax.jit
+        def adam_step(params, m, v, t):
+            loss, g = loss_grad(params)
+            m = jax.tree.map(lambda a, b_: 0.9 * a + 0.1 * b_, m, g)
+            v = jax.tree.map(lambda a, b_: 0.999 * a + 0.001 * b_ * b_, v, g)
+            mh = jax.tree.map(lambda a: a / (1 - 0.9 ** t), m)
+            vh = jax.tree.map(lambda a: a / (1 - 0.999 ** t), v)
+            params = jax.tree.map(
+                lambda p, a, b_: p - lr * a / (jnp.sqrt(b_) + 1e-8), params, mh, vh)
+            return params, m, v, loss
+
+        for t in range(1, steps + 1):
+            params, m, v, _ = adam_step(params, m, v, jnp.float32(t))
+        self.w, self.b = params
+        self._trained = True
+        pred = np.argmax(np.asarray(_lr_predict_logits(self.w, self.b, x)), axis=1)
+        return float(np.mean(pred == np.asarray(y)))
+
+    def predict(self, text: str) -> int:
+        e = jnp.asarray(self.embedder.encode(self.instruction_text(text)))[None]
+        return int(np.argmax(np.asarray(_lr_predict_logits(self.w, self.b, e))))
+
+    def state_dict(self) -> dict:
+        return {"w": np.asarray(self.w), "b": np.asarray(self.b)}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.w = jnp.asarray(d["w"]); self.b = jnp.asarray(d["b"])
+        self._trained = True
+
+
+# ---------------------------------------------------------------------------
+# Online k-means (paper Eq. 9-10): cosine assignment, incremental update.
+# ---------------------------------------------------------------------------
+
+
+class OnlineKMeans:
+    """Online k-means with cosine assignment and decaying-rate updates."""
+
+    def __init__(self, k: int, dim: int):
+        if k < 1:
+            raise ValueError("k must be >= 1")
+        self.k = k
+        self.dim = dim
+        self.centroids = np.zeros((k, dim), dtype=np.float32)
+        self.counts = np.zeros((k,), dtype=np.int64)
+        self._initialized = 0  # first K distinct embeddings seed the centroids
+
+    def assign(self, e: np.ndarray) -> int:
+        """Eq. 9: argmax_c cos(e, mu_c) over initialized centroids."""
+        live = max(self._initialized, 1)
+        c = self.centroids[:live]
+        norms = np.linalg.norm(c, axis=1) * max(np.linalg.norm(e), 1e-12)
+        sims = (c @ e) / np.maximum(norms, 1e-12)
+        return int(np.argmax(sims))
+
+    def update(self, e: np.ndarray) -> int:
+        """Assign, then apply the Eq. 10 incremental centroid update."""
+        e = np.asarray(e, dtype=np.float32)
+        if self._initialized < self.k:
+            # seed from the first K distinct embeddings (paper §4.2.2)
+            for i in range(self._initialized):
+                if np.allclose(self.centroids[i], e, atol=1e-6):
+                    break
+            else:
+                idx = self._initialized
+                self.centroids[idx] = e
+                self.counts[idx] = 1
+                self._initialized += 1
+                return idx
+        c = self.assign(e)
+        n = self.counts[c]
+        self.centroids[c] += (e - self.centroids[c]) / (n + 1)
+        self.counts[c] += 1
+        return c
+
+    def state_dict(self) -> dict:
+        return {"centroids": self.centroids.copy(), "counts": self.counts.copy(),
+                "initialized": self._initialized}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.centroids = np.asarray(d["centroids"], dtype=np.float32).copy()
+        self.counts = np.asarray(d["counts"], dtype=np.int64).copy()
+        self._initialized = int(d["initialized"])
+
+
+# ---------------------------------------------------------------------------
+# Flesch Reading Ease (Eq. 11) + equal-width binning.
+# ---------------------------------------------------------------------------
+
+_SENT_SPLIT = re.compile(r"[.!?]+")
+_VOWEL_GROUPS = re.compile(r"[aeiouy]+")
+
+
+def count_syllables(word: str) -> int:
+    w = word.lower().strip("'")
+    if not w:
+        return 0
+    groups = _VOWEL_GROUPS.findall(w)
+    n = len(groups)
+    if w.endswith("e") and n > 1 and not w.endswith(("le", "ee", "ye")):
+        n -= 1  # silent final e
+    return max(n, 1)
+
+
+def flesch_reading_ease(text: str) -> float:
+    """Eq. 11; clamped to [0, 100] as the paper bins in that range."""
+    words = tokenize(text)
+    if not words:
+        return 100.0
+    sentences = max(len([s for s in _SENT_SPLIT.split(text) if s.strip()]), 1)
+    syllables = sum(count_syllables(w) for w in words)
+    score = 206.835 - 1.015 * (len(words) / sentences) - 84.6 * (syllables / len(words))
+    return float(np.clip(score, 0.0, 100.0))
+
+
+class FleschComplexity:
+    """Score + equal-width binning into N_bins categories (paper §4.2.3)."""
+
+    def __init__(self, n_bins: int, lo: float = 0.0, hi: float = 100.0):
+        if n_bins < 1:
+            raise ValueError("n_bins must be >= 1")
+        self.n_bins = n_bins
+        self.lo, self.hi = lo, hi
+
+    def score(self, text: str) -> float:
+        return flesch_reading_ease(text)
+
+    def bin(self, score: float) -> int:
+        width = (self.hi - self.lo) / self.n_bins
+        b = int((score - self.lo) / width)
+        return int(np.clip(b, 0, self.n_bins - 1))
+
+    def __call__(self, text: str) -> Tuple[float, int]:
+        s = self.score(text)
+        return s, self.bin(s)
+
+
+# ---------------------------------------------------------------------------
+# Context vectorizer: one-hot + intercept (paper §4.2.4).
+# ---------------------------------------------------------------------------
+
+
+class ContextGenerator:
+    """Combines the three extractors into x_t ∈ R^d (d = N_tasks+K+N_bins+1)."""
+
+    def __init__(self, config: RouterConfig, embedder: Optional[EmbeddingModel] = None):
+        self.config = config
+        self.embedder = embedder or EmbeddingModel()
+        self.task_classifier = TaskClassifier(self.embedder, n_classes=config.n_tasks,
+                                              seed=config.seed)
+        self.kmeans = OnlineKMeans(config.n_clusters, self.embedder.dim)
+        self.complexity = FleschComplexity(config.n_complexity_bins)
+        # feature toggles for the ablation study (paper §6.2.3)
+        self.use_task = True
+        self.use_cluster = True
+        self.use_complexity = True
+        self.timings_ms = {"task": 0.0, "cluster": 0.0, "complexity": 0.0, "n": 0}
+
+    def set_features(self, task: bool = True, cluster: bool = True,
+                     complexity: bool = True) -> None:
+        self.use_task, self.use_cluster, self.use_complexity = task, cluster, complexity
+
+    @property
+    def dim(self) -> int:
+        return self.config.context_dim
+
+    def encode(self, task_label: int, cluster: int, comp_bin: int) -> np.ndarray:
+        cfg = self.config
+        x = np.zeros(cfg.context_dim, dtype=np.float32)
+        if self.use_task:
+            x[task_label] = 1.0
+        if self.use_cluster:
+            x[cfg.n_tasks + cluster] = 1.0
+        if self.use_complexity:
+            x[cfg.n_tasks + cfg.n_clusters + comp_bin] = 1.0
+        x[-1] = 1.0  # intercept
+        return x
+
+    def __call__(self, text: str) -> ContextVector:
+        t0 = time.perf_counter()
+        task_label = self.task_classifier.predict(text) if self.use_task else 0
+        t1 = time.perf_counter()
+        if self.use_cluster:
+            e_full = self.embedder.encode(text)
+            cluster = self.kmeans.update(e_full)
+        else:
+            cluster = 0
+        t2 = time.perf_counter()
+        if self.use_complexity:
+            comp_score, comp_bin = self.complexity(text)
+        else:
+            comp_score, comp_bin = 100.0, 0
+        t3 = time.perf_counter()
+        self.timings_ms["task"] += (t1 - t0) * 1e3
+        self.timings_ms["cluster"] += (t2 - t1) * 1e3
+        self.timings_ms["complexity"] += (t3 - t2) * 1e3
+        self.timings_ms["n"] += 1
+        return ContextVector(
+            task_label=task_label, cluster=cluster, complexity_bin=comp_bin,
+            complexity_score=comp_score,
+            vector=self.encode(task_label, cluster, comp_bin))
+
+    def mean_overhead_ms(self) -> dict:
+        n = max(self.timings_ms["n"], 1)
+        return {k: v / n for k, v in self.timings_ms.items() if k != "n"}
+
+    def state_dict(self) -> dict:
+        return {"task": self.task_classifier.state_dict(),
+                "kmeans": self.kmeans.state_dict()}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.task_classifier.load_state_dict(d["task"])
+        self.kmeans.load_state_dict(d["kmeans"])

@@ -1,0 +1,77 @@
+"""Deterministic sentence embeddings for the context generator.
+
+The paper uses sentence-transformers/all-MiniLM-L6-v2 (384-d).  This container
+is offline, so we provide a pure-numpy hashed n-gram encoder with the same
+interface and dimensionality: tokens and character trigrams are hashed into a
+fixed-size space, tf-weighted, projected through a fixed random (seeded)
+Gaussian matrix, and L2-normalized.  This preserves the two properties the
+router actually relies on:
+
+  * queries about similar topics land near each other (shared vocabulary →
+    shared hash buckets → similar projections), so online k-means produces
+    stable semantic clusters;
+  * the map is deterministic and cheap (paper overhead budget: ~3 ms/query).
+
+A real deployment would swap in a MiniLM forward pass behind ``EmbeddingModel``.
+"""
+from __future__ import annotations
+
+import hashlib
+import re
+from typing import List, Sequence
+
+import numpy as np
+
+_TOKEN_RE = re.compile(r"[a-z0-9']+")
+_HASH_DIM = 2048
+_EMBED_DIM = 384
+
+
+def _stable_hash(s: str) -> int:
+    # Python's hash() is salted per-process; use blake2 for determinism.
+    return int.from_bytes(hashlib.blake2b(s.encode(), digest_size=8).digest(), "little")
+
+
+def tokenize(text: str) -> List[str]:
+    return _TOKEN_RE.findall(text.lower())
+
+
+class EmbeddingModel:
+    """384-d deterministic sentence encoder (drop-in for MiniLM)."""
+
+    def __init__(self, dim: int = _EMBED_DIM, hash_dim: int = _HASH_DIM, seed: int = 1234):
+        self.dim = dim
+        self.hash_dim = hash_dim
+        rng = np.random.default_rng(seed)
+        # fixed projection: hashed bag-of-features -> dense embedding
+        self._proj = rng.standard_normal((hash_dim, dim)).astype(np.float32)
+        self._proj /= np.sqrt(hash_dim)
+
+    def _sparse_counts(self, text: str) -> np.ndarray:
+        counts = np.zeros(self.hash_dim, dtype=np.float32)
+        toks = tokenize(text)
+        for tok in toks:
+            counts[_stable_hash("w:" + tok) % self.hash_dim] += 1.0
+            # char trigrams catch morphology / domain jargon
+            padded = f"^{tok}$"
+            for i in range(len(padded) - 2):
+                counts[_stable_hash("c:" + padded[i : i + 3]) % self.hash_dim] += 0.5
+        # bigrams give phrase-level signal (cheap MiniLM stand-in)
+        for a, b in zip(toks, toks[1:]):
+            counts[_stable_hash(f"b:{a}_{b}") % self.hash_dim] += 0.75
+        return counts
+
+    def encode(self, text: str) -> np.ndarray:
+        """Embed one string -> (dim,) unit vector."""
+        counts = self._sparse_counts(text)
+        total = counts.sum()
+        if total > 0:
+            counts = np.log1p(counts)  # sublinear tf
+        v = counts @ self._proj
+        n = np.linalg.norm(v)
+        return (v / n if n > 0 else v).astype(np.float32)
+
+    def encode_batch(self, texts: Sequence[str]) -> np.ndarray:
+        if len(texts) == 0:
+            return np.zeros((0, self.dim), dtype=np.float32)
+        return np.stack([self.encode(t) for t in texts])

@@ -1,0 +1,157 @@
+"""Analytic TPU energy model + roofline terms (hardware adaptation, DESIGN §4).
+
+The paper measures GPU energy with zeus/NVML.  TPU pods expose no per-query
+power counters, so we model energy from first principles:
+
+    t_step  = max(t_compute, t_memory, t_collective)          (roofline)
+    E_step  = P_static · t_step
+            + e_flop · FLOPs + e_hbm · HBM_bytes + e_ici · ICI_bytes
+
+The FLOPs/bytes terms come from ``compiled.cost_analysis()`` at dry-run time
+and from the analytic per-token transformer cost model (below) at serving
+time.  Constants are from public TPU v5e specs; the interface is pluggable so
+a measured-power backend can replace this on hardware with telemetry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW_PER_LINK = 50e9          # bytes/s per link (~)
+ICI_LINKS = 4                   # 2D torus: 4 links/chip on v5e
+CHIP_TDP_W = 200.0              # board power envelope
+CHIP_IDLE_W = 60.0              # static / leakage share
+
+# dynamic energy coefficients (derived so that a chip at 100% utilization of
+# one resource dissipates (TDP - idle) through that resource)
+E_PER_FLOP = (CHIP_TDP_W - CHIP_IDLE_W) / PEAK_FLOPS_BF16     # J / FLOP
+E_PER_HBM_BYTE = (CHIP_TDP_W - CHIP_IDLE_W) / HBM_BW          # J / byte
+E_PER_ICI_BYTE = (CHIP_TDP_W - CHIP_IDLE_W) / (ICI_BW_PER_LINK * ICI_LINKS)
+
+JOULES_PER_WH = 3600.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    """The three §Roofline terms, in seconds, for one step on `chips` chips."""
+
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    flops: float
+    hbm_bytes: float
+    ici_bytes: float
+    chips: int
+
+    @property
+    def t_step(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of ideal (compute-bound) time: 1.0 = at compute roofline."""
+        if self.t_step <= 0:
+            return 0.0
+        return self.t_compute / self.t_step
+
+
+def roofline(flops: float, hbm_bytes: float, ici_bytes: float,
+             chips: int = 1) -> RooflineTerms:
+    """FLOPs/bytes are *totals*; we divide across chips (already-sharded HLO
+    cost_analysis reports per-device numbers — pass chips=1 in that case)."""
+    return RooflineTerms(
+        t_compute=flops / (chips * PEAK_FLOPS_BF16),
+        t_memory=hbm_bytes / (chips * HBM_BW),
+        t_collective=ici_bytes / (chips * ICI_BW_PER_LINK * ICI_LINKS),
+        flops=flops, hbm_bytes=hbm_bytes, ici_bytes=ici_bytes, chips=chips)
+
+
+def energy_joules(terms: RooflineTerms) -> float:
+    """Analytic per-step energy across all chips involved."""
+    dynamic = (E_PER_FLOP * terms.flops + E_PER_HBM_BYTE * terms.hbm_bytes +
+               E_PER_ICI_BYTE * terms.ici_bytes)
+    static = CHIP_IDLE_W * terms.t_step * terms.chips
+    return dynamic + static
+
+
+def energy_wh(terms: RooflineTerms) -> float:
+    return energy_joules(terms) / JOULES_PER_WH
+
+
+# ---------------------------------------------------------------------------
+# Analytic transformer cost model (per-query serving energy).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModelParams:
+    """Minimal shape info needed for the 6ND-style cost model."""
+
+    n_params: float                  # total parameters
+    n_active_params: float           # active per token (MoE: routed subset)
+    d_model: int
+    n_layers: int
+    kv_heads: int
+    head_dim: int
+    dtype_bytes: int = 2
+
+
+def decode_step_cost(p: CostModelParams, kv_len: int, batch: int = 1):
+    """(flops, hbm_bytes) for one decode token per sequence.
+
+    FLOPs ≈ 2·N_active per token (matmul) + attention 2·2·kv·d_kv reads.
+    HBM ≈ full weight read (decode is weight-bandwidth-bound) + KV read.
+    """
+    flops = 2.0 * p.n_active_params * batch
+    kv_dim = p.kv_heads * p.head_dim
+    flops += 4.0 * kv_len * kv_dim * p.n_layers * batch
+    weight_bytes = p.n_active_params * p.dtype_bytes
+    kv_bytes = 2.0 * kv_len * kv_dim * p.n_layers * p.dtype_bytes * batch
+    return flops, weight_bytes + kv_bytes
+
+
+def prefill_cost(p: CostModelParams, seq_len: int, batch: int = 1):
+    """(flops, hbm_bytes) for a full prefill."""
+    flops = 2.0 * p.n_active_params * seq_len * batch
+    kv_dim = p.kv_heads * p.head_dim
+    flops += 2.0 * seq_len * seq_len * kv_dim * p.n_layers * batch  # attn QK+AV
+    act_bytes = 10.0 * seq_len * p.d_model * p.n_layers * p.dtype_bytes * batch
+    weight_bytes = p.n_params * p.dtype_bytes
+    return flops, weight_bytes + act_bytes
+
+
+class EnergyMonitor:
+    """Pluggable per-query energy accounting (zeus stand-in, DESIGN §4)."""
+
+    def __init__(self, chips: int = 1):
+        self.chips = chips
+        self.total_joules = 0.0
+        self.n_queries = 0
+
+    def measure_query(self, p: CostModelParams, input_tokens: int,
+                      output_tokens: int, batch: int = 1) -> float:
+        """Returns modeled Wh for one query; accumulates totals."""
+        f_pre, b_pre = prefill_cost(p, max(input_tokens, 1), batch)
+        joules = energy_joules(roofline(f_pre, b_pre, 0.0, self.chips))
+        kv = input_tokens
+        # decode tokens at increasing kv length (use midpoint approximation)
+        mid_kv = kv + max(output_tokens, 1) // 2
+        f_dec, b_dec = decode_step_cost(p, mid_kv, batch)
+        joules += max(output_tokens, 0) * energy_joules(
+            roofline(f_dec, b_dec, 0.0, self.chips))
+        self.total_joules += joules
+        self.n_queries += 1
+        return joules / JOULES_PER_WH
+
+    @property
+    def total_wh(self) -> float:
+        return self.total_joules / JOULES_PER_WH

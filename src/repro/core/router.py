@@ -1,0 +1,122 @@
+"""GreenServ router: context → feasibility → bandit → reward → update.
+
+Implements Algorithm 1 of the paper as a long-lived service object:
+
+    for each query q_t:
+        x_t  = GenerateContext(q_t)                 (ContextGenerator)
+        m_t  = SelectModel(x_t, M_t*, A)            (BanditPolicy over pool)
+        resp = InferenceExecution(m_t, q_t)         (caller / serving engine)
+        acc, energy, latency = Monitor(resp)        (caller feeds back)
+        r_t  = (1-λ)·acc − λ·energy                 (RewardManager)
+        UpdateMAB(A_m, b_m, x_t, r_t)               (BanditPolicy.update)
+
+The router is deliberately decoupled from inference execution: ``route()``
+returns a decision, the engine executes it, and ``feedback()`` closes the
+loop.  This matches the paper's partial-feedback structure and lets the
+serving runtime batch/queue independently.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.bandits import BanditPolicy
+from repro.core.context import ContextGenerator
+from repro.core.pool import ModelPool
+from repro.core.rewards import RegretTracker, RewardManager, scalarize
+from repro.core.types import (ContextVector, Feedback, ModelProfile, Query,
+                              RouteDecision, RouterConfig)
+
+
+class GreenServRouter:
+    """The paper's contribution as a composable module."""
+
+    def __init__(self, config: RouterConfig, pool: ModelPool,
+                 context: Optional[ContextGenerator] = None):
+        self.config = config
+        self.pool = pool
+        self.context = context or ContextGenerator(config)
+        self.policy = BanditPolicy(config, n_arms=len(pool))
+        self.rewards = RewardManager(config)
+        self.regret = RegretTracker()
+        self._pending: Dict[int, RouteDecision] = {}
+        self.decision_ms_total = 0.0
+        self.n_routed = 0
+        # zero-calibration model addition: pool insert → fresh bandit arm
+        pool.on_add(self._on_model_added)
+
+    # -- pool growth ---------------------------------------------------------
+
+    def _on_model_added(self, profile: ModelProfile, idx: int) -> None:
+        arm = self.policy.add_arm()
+        if arm != idx:
+            raise RuntimeError(
+                f"pool/bandit index skew: pool={idx} arm={arm}")
+
+    # -- Algorithm 1 ---------------------------------------------------------
+
+    def route(self, query: Query) -> RouteDecision:
+        x_t = self.context(query.text)
+        t0 = time.perf_counter()
+        feasible = self.pool.feasible_mask(query)
+        arm, scores = self.policy.select(x_t.vector, feasible)
+        decision_ms = (time.perf_counter() - t0) * 1e3
+        self.decision_ms_total += decision_ms
+        self.n_routed += 1
+        decision = RouteDecision(
+            query_uid=query.uid, model_index=arm,
+            model_name=self.pool[arm].name, context=x_t,
+            ucb_scores=scores, feasible_mask=feasible,
+            overhead_ms=decision_ms)
+        self._pending[query.uid] = decision
+        return decision
+
+    def feedback(self, fb: Feedback,
+                 oracle_reward: Optional[float] = None) -> float:
+        """Close the loop for a routed query; returns the scalarized reward.
+
+        ``oracle_reward`` (counterfactual best reward, Eq. 6) is only
+        available in simulation/offline evaluation; when given, regret is
+        tracked (Eq. 8).
+        """
+        decision = self._pending.pop(fb.query_uid, None)
+        if decision is None:
+            raise KeyError(f"no pending decision for query {fb.query_uid}")
+        if fb.model_index != decision.model_index:
+            raise ValueError("feedback model does not match routed model")
+        r_t = self.rewards.reward(fb.accuracy, fb.energy_wh)
+        self.policy.update(decision.model_index, decision.context.vector, r_t)
+        if oracle_reward is not None:
+            self.regret.step(r_t, oracle_reward)
+        return r_t
+
+    def oracle_reward(self, acc_by_model: np.ndarray,
+                      energy_by_model: np.ndarray,
+                      feasible: Optional[np.ndarray] = None) -> float:
+        """Eq. 6 helper for simulators holding full counterfactual tables."""
+        r = np.array([scalarize(a, e, self.config.lam, self.config.energy_scale_wh)
+                      for a, e in zip(acc_by_model, energy_by_model)])
+        if feasible is not None:
+            r = np.where(feasible, r, -np.inf)
+        return float(np.max(r))
+
+    # -- introspection / persistence ------------------------------------------
+
+    @property
+    def mean_decision_ms(self) -> float:
+        return self.decision_ms_total / max(self.n_routed, 1)
+
+    def selection_counts(self) -> np.ndarray:
+        return np.asarray(self.policy.state.counts)[: len(self.pool)]
+
+    def state_dict(self) -> dict:
+        return {"bandit": self.policy.state_dict(),
+                "context": self.context.state_dict(),
+                "n_routed": self.n_routed}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.policy.load_state_dict(d["bandit"])
+        self.context.load_state_dict(d["context"])
+        self.n_routed = int(d.get("n_routed", 0))

@@ -1,0 +1,9 @@
+"""Data substrate: query streams, behaviour profiles, tokenizer, RouterBench."""
+from repro.data import profiles, routerbench, stream, tokenizer
+from repro.data.profiles import (ENERGY_SCALE_WH, OutcomeSimulator,
+                                 mean_accuracy, mean_energy_mwh)
+from repro.data.stream import labeled_sample, make_query, make_stream
+
+__all__ = ["profiles", "routerbench", "stream", "tokenizer",
+           "ENERGY_SCALE_WH", "OutcomeSimulator", "mean_accuracy",
+           "mean_energy_mwh", "labeled_sample", "make_query", "make_stream"]

@@ -1,0 +1,10 @@
+"""Distributed runtime: checkpointing, elastic re-meshing, fault detection."""
+from repro.distributed import checkpoint, elastic, fault
+from repro.distributed.checkpoint import latest_step, prune, restore, save
+from repro.distributed.elastic import RemeshPlan, build_mesh, plan_remesh
+from repro.distributed.fault import (HeartbeatMonitor, StragglerDetector,
+                                     TrainWatchdog)
+
+__all__ = ["checkpoint", "elastic", "fault", "latest_step", "prune",
+           "restore", "save", "RemeshPlan", "build_mesh", "plan_remesh",
+           "HeartbeatMonitor", "StragglerDetector", "TrainWatchdog"]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the serving hot spots + the paper's router.
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd wrapper, auto interpret=True off-TPU), and ref.py
+(pure-jnp oracle used by the per-kernel allclose test sweeps).
+"""
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.linucb import linucb_scores
+from repro.kernels.mamba2 import ssd
+from repro.kernels.moe_gating import topk_gating
+from repro.kernels.rwkv6 import wkv
+
+__all__ = ["decode_attention", "flash_attention", "linucb_scores", "ssd",
+           "topk_gating", "wkv"]

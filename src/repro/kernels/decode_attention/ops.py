@@ -1,0 +1,30 @@
+"""jit'd public wrapper for the flash-decode kernel."""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import flash_decode_fwd
+
+
+def _pick_block(n: int, target: int) -> int:
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return b
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     window: Union[int, jax.Array],
+                     cache_len: Union[int, jax.Array], block_k: int = 1024,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Drop-in for models.attention.decode_attend (Pallas TPU path)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bk = _pick_block(k_cache.shape[1], block_k)
+    scalars = jnp.stack([jnp.asarray(cache_len, jnp.int32),
+                         jnp.asarray(window, jnp.int32)])
+    return flash_decode_fwd(q, k_cache, v_cache, scalars, bk=bk,
+                            interpret=interpret)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-decode kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, window: int,
+                         cache_len: int) -> jnp.ndarray:
+    """q: (B, 1, Hq, hd); caches: (B, S, Hk, hd).  Attends to positions
+    [max(0, cache_len - window), cache_len)."""
+    b, _, hq, hd = q.shape
+    s, hk = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hk
+    qf = q.reshape(b, hk, group, hd).astype(jnp.float32) * (hd ** -0.5)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, k_cache.astype(jnp.float32))
+    pos = jnp.arange(s)
+    valid = (pos < cache_len) & (pos >= cache_len - window)
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)

@@ -1,0 +1,41 @@
+"""jit'd public wrapper for the flash-attention prefill kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (block shapes must tile)."""
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    window: Union[int, jax.Array], chunk: int = 512,
+                    causal: bool = True,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Drop-in for models.attention.flash_prefill (Pallas TPU path).
+
+    q: (B, Sq, Hq, hd); k, v: (B, Sk, Hk, hd); ``window`` may be a traced
+    scalar (per-layer local/global windows under one compiled kernel).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    sq, sk = q.shape[1], k.shape[1]
+    bq = _pick_block(sq, chunk)
+    bk = _pick_block(sk, chunk)
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+    return flash_attention_fwd(q, k, v, win, bq=bq, bk=bk, causal=causal,
+                               interpret=interpret)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention prefill kernel.
+
+Unblocked O(S²) attention with GQA, causal masking, and a sliding window —
+the numerical ground truth every kernel variant is asserted against.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  window: int, causal: bool = True,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """q: (B, Sq, Hq, hd); k, v: (B, Sk, Hk, hd).  ``window`` counts visible
+    past positions including self; window >= Sk ⇒ full attention."""
+    b, sq, hq, hd = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    group = hq // hk
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    qf = qf.reshape(b, sq, hk, group, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, sq, hq, hd).astype(q.dtype)

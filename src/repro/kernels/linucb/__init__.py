@@ -1,0 +1,4 @@
+from repro.kernels.linucb import ops, ref
+from repro.kernels.linucb.ops import linucb_scores
+
+__all__ = ["ops", "ref", "linucb_scores"]

@@ -1,0 +1,33 @@
+"""jit'd public wrapper for the LinUCB scoring kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.linucb.kernel import linucb_scores_fwd
+
+
+def _pick_block(n: int, target: int) -> int:
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return b
+
+
+def linucb_scores(a_inv: jax.Array, theta: jax.Array, x: jax.Array,
+                  alpha: float, block_m: int = 16, block_q: int = 128,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """a_inv: (M, d, d); theta: (M, d); x: (d,) or (Q, d) → (M,) or (Q, M)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    single = x.ndim == 1
+    xq = x[None] if single else x
+    bm = _pick_block(a_inv.shape[0], block_m)
+    bq = _pick_block(xq.shape[0], block_q)
+    out = linucb_scores_fwd(a_inv.astype(jnp.float32),
+                            theta.astype(jnp.float32),
+                            xq.astype(jnp.float32), float(alpha),
+                            bm=bm, bq=bq, interpret=interpret)
+    return out[0] if single else out

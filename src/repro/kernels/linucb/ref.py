@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the batched LinUCB scoring kernel (paper Eq. 13)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linucb_scores_ref(a_inv: jnp.ndarray, theta: jnp.ndarray,
+                      x: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    """a_inv: (M, d, d); theta: (M, d); x: (Q, d) → scores (Q, M):
+    θ_mᵀx_q + α·sqrt(x_qᵀ A_m⁻¹ x_q)."""
+    mean = jnp.einsum("md,qd->qm", theta, x)
+    ax = jnp.einsum("mij,qj->qmi", a_inv, x)
+    var = jnp.maximum(jnp.einsum("qmi,qi->qm", ax, x), 0.0)
+    return mean + alpha * jnp.sqrt(var)

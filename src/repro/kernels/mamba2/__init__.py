@@ -1,0 +1,4 @@
+from repro.kernels.mamba2 import ops, ref
+from repro.kernels.mamba2.ops import ssd
+
+__all__ = ["ops", "ref", "ssd"]

@@ -1,0 +1,31 @@
+"""jit'd public wrapper for the Mamba2 SSD kernel."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba2.kernel import ssd_fwd
+
+
+def _pick_block(n: int, target: int) -> int:
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return b
+
+
+def ssd(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+        A: jax.Array, h0: Optional[jax.Array] = None, chunk: int = 64,
+        interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan: returns (y (b,s,h,p), h_final (b,h,p,n) f32)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    c = _pick_block(s, chunk)
+    return ssd_fwd(x, dt, B, C, A.astype(jnp.float32), h0, chunk=c,
+                   interpret=interpret)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the Mamba2 SSD kernel: exact sequential recurrence."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray,
+            A: jnp.ndarray, h0: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-by-token SSD recurrence.
+
+    x: (b, s, h, p); dt: (b, s, h); B, C: (b, s, n); A: (h,) negative.
+        h ← h·exp(dt_t·A) + dt_t·x_t ⊗ B_t ;  y_t = C_t · h
+    Returns (y (b, s, h, p), h_final (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(state, xs):
+        xt, dtt, Bt, Ct = xs           # (b,h,p), (b,h), (b,n), (b,n)
+        decay = jnp.exp(dtt * Af[None])[:, :, None, None]
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], Bt)
+        state = state * decay + upd
+        y = jnp.einsum("bn,bhpn->bhp", Ct, state)
+        return state, y
+
+    h_fin, ys = jax.lax.scan(
+        step, h0, (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+                   jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_fin

@@ -1,0 +1,4 @@
+from repro.kernels.moe_gating import ops, ref
+from repro.kernels.moe_gating.ops import topk_gating
+
+__all__ = ["ops", "ref", "topk_gating"]

@@ -1,0 +1,27 @@
+"""jit'd public wrapper for the fused top-k gating kernel."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gating.kernel import topk_gating_fwd
+
+
+def _pick_block(n: int, target: int) -> int:
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return b
+
+
+def topk_gating(logits: jax.Array, k: int, block_t: int = 256,
+                interpret: Optional[bool] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """logits: (T, E) → (weights (T, k) f32, indices (T, k) i32)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bt = _pick_block(logits.shape[0], block_t)
+    w, i = topk_gating_fwd(logits.astype(jnp.float32), k, bt, interpret)
+    return w, i

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused top-k gating kernel."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_gating_ref(logits: jnp.ndarray, k: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """logits: (T, E) f32 → (weights (T, k) softmaxed over the top-k,
+    indices (T, k) int32), descending by logit."""
+    gates, idx = jax.lax.top_k(logits, k)
+    return jax.nn.softmax(gates, axis=-1), idx.astype(jnp.int32)

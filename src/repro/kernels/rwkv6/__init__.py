@@ -1,0 +1,4 @@
+from repro.kernels.rwkv6 import ops, ref
+from repro.kernels.rwkv6.ops import wkv
+
+__all__ = ["ops", "ref", "wkv"]

@@ -1,0 +1,29 @@
+"""jit'd public wrapper for the RWKV6 WKV kernel."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import wkv_fwd
+
+
+def _pick_block(n: int, target: int) -> int:
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return b
+
+
+def wkv(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+        u: jax.Array, s0: Optional[jax.Array] = None, chunk: int = 32,
+        interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked WKV scan: returns (y (B,S,H,K), final state (B,H,K,K) f32)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, s, h, kd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, kd, kd), jnp.float32)
+    c = _pick_block(s, chunk)
+    return wkv_fwd(r, k, v, logw, u, s0, chunk=c, interpret=interpret)

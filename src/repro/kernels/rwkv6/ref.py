@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the RWKV6 WKV kernel: exact sequential recurrence."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+            logw: jnp.ndarray, u: jnp.ndarray,
+            s0: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-by-token WKV recurrence (the definitional form).
+
+    r,k,v,logw: (B, S, H, K); u: (H, K); s0: (B, H, K, K) or None.
+        y_t = r_t · (S + u ⊙ k_t ⊗ v_t);  S ← S·exp(logw_t)[:,None] + k_t ⊗ v_t
+    """
+    b, s, h, kd = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, logw))
+    uf = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((b, h, kd, kd), jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs            # (B, H, K)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + uf[None, :, :, None] * kv)
+        S = S * jnp.exp(wt)[..., None] + kv
+        return S, y
+
+    S_fin, ys = jax.lax.scan(
+        step, s0, tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf)))
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), S_fin

@@ -1,0 +1,132 @@
+"""Collective-traffic accounting from compiled HLO text (§Roofline).
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but not collective
+traffic, so we parse the optimized (SPMD-partitioned) HLO: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction is charged per-chip ICI wire bytes under the standard ring/torus
+cost model:
+
+    all-reduce       2·(k-1)/k · operand_bytes
+    all-gather         (k-1)/k · result_bytes
+    reduce-scatter     (k-1)/k · operand_bytes
+    all-to-all         (k-1)/k · operand_bytes
+    collective-permute           result_bytes
+
+where k is the replica-group size.  Operand shapes are resolved through a
+name → shape table built from the instruction definitions (optimized HLO
+prints operands by name only).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# %name = dtype[d0,d1]{layout} opcode(...)
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*\)|[\w\d]+\[[^\]]*\][^\s]*)\s+([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    """Total bytes of a shape string, incl. tuple shapes."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)           # iota form: [groups,size]<=[n]
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)      # explicit {{0,1},{2,3}} form
+    if m:
+        first = m.group(1).split("}")[0].strip("{ ")
+        if first:
+            return len(first.split(","))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-chip ICI wire-byte totals by collective kind."""
+
+    by_kind: Dict[str, float]
+    n_ops: int
+    ops: List[Tuple[str, float, int]]   # (kind, bytes, group_size)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.by_kind.values()))
+
+    def summary(self) -> str:
+        parts = [f"{k}={v/1e6:.1f}MB" for k, v in sorted(self.by_kind.items())]
+        return f"{self.n_ops} ops, {self.total_bytes/1e6:.1f}MB/chip: " + \
+            ", ".join(parts)
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> CollectiveStats:
+    shapes: Dict[str, str] = {}
+    by_kind: Dict[str, float] = {}
+    ops: List[Tuple[str, float, int]] = []
+    n_ops = 0
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_text, opcode = m.group(1), m.group(2), m.group(3)
+        shapes[name] = shape_text
+        kind = next((c for c in COLLECTIVES if opcode.startswith(c)), None)
+        if kind is None or opcode.endswith("-start") and False:
+            continue
+        if opcode.endswith("-done"):
+            continue  # async pair: charge the -start only
+        k = _group_size(line, n_devices)
+        result_bytes = _shape_bytes(shape_text)
+        # operand bytes: resolve names inside the parens against the table
+        paren = line[line.index("(") + 1:]
+        operand_bytes = 0
+        for om in _OPERAND_RE.finditer(paren.split(")")[0]):
+            operand_bytes += _shape_bytes(shapes.get(om.group(1), ""))
+        if operand_bytes == 0:
+            operand_bytes = result_bytes
+
+        if kind == "all-reduce":
+            wire = 2.0 * (k - 1) / max(k, 1) * operand_bytes
+        elif kind == "all-gather":
+            wire = (k - 1) / max(k, 1) * result_bytes
+        elif kind in ("reduce-scatter", "all-to-all"):
+            wire = (k - 1) / max(k, 1) * operand_bytes
+        else:  # collective-permute
+            wire = float(result_bytes)
+        by_kind[kind] = by_kind.get(kind, 0.0) + wire
+        ops.append((kind, wire, k))
+        n_ops += 1
+    return CollectiveStats(by_kind=by_kind, n_ops=n_ops, ops=ops)
+
+
+def count_op(hlo_text: str, opcode: str) -> int:
+    return len(re.findall(rf"=\s*(?:\([^=]*\)|\S+)\s+{re.escape(opcode)}\(",
+                          hlo_text))

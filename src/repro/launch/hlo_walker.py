@@ -1,0 +1,462 @@
+"""While-aware HLO cost walker (§Roofline ground truth).
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of trip
+count — a 62-layer scanned transformer under-reports flops and collective
+traffic by 62×.  This walker parses the optimized (SPMD-partitioned) HLO
+text and computes, per device:
+
+    flops        2·M·N·K for every dot, ×(product of enclosing while trips)
+    bytes        operand+result bytes of every top-level memory op
+                 (fusion boundaries = HBM traffic granularity), ×trips
+    coll_bytes   per-chip ICI wire bytes of every collective under the
+                 ring/torus model (see launch.hlo), ×trips
+
+Trip counts come from the canonical scan lowering: the while condition
+compares the induction variable against a constant.  Conditionals take the
+mean of their branch costs and raise a warning — the model code avoids
+lax.cond on hot paths for exactly this reason.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->\s*\S.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\d]+\[[^\]]*\]\S*))\s+([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_NAME_REF = re.compile(r"%([\w.\-]+)")
+_ATTR = re.compile(r"(\w+)=%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONSTANT = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "iota", "partition-id", "replica-id"}
+
+
+def _shape_dims(shape_text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE.finditer(shape_text):
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((m.group(1), dims))
+    return out
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 0)
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    rest: str       # everything after the opening paren (operands + attrs)
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(rf"{key}=%?([\w.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+    def operand_names(self) -> List[str]:
+        # names inside the first top-level paren group
+        depth = 1
+        out = []
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    out = _NAME_REF.findall(self.rest[:i])
+                    break
+        else:
+            out = _NAME_REF.findall(self.rest.split(")")[0])
+        return out
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        h = _COMP_HEADER.match(line)
+        if h and ("{" in line) and " = " not in line:
+            cur = Computation(h.group(1), [], {})
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.instrs.append(ins)
+            cur.shapes[ins.name] = ins.shape
+        else:
+            # parameter declarations etc inside the computation header — the
+            # parameter instructions also match _INSTR; anything else skipped
+            pm = re.match(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+                          r"((?:\([^)]*\))|(?:[\w\d]+\[[^\]]*\]\S*))\s+parameter\(",
+                          line)
+            if pm:
+                ins = Instr(pm.group(1), pm.group(2), "parameter", "")
+                cur.instrs.append(ins)
+                cur.shapes[ins.name] = ins.shape
+    return comps, entry
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    n_collectives: float = 0.0
+    warnings: List[str] = dataclasses.field(default_factory=list)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        self.n_collectives += other.n_collectives * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * mult
+        for w in other.warnings:
+            if w not in self.warnings:
+                self.warnings.append(w)
+
+
+class HloWalker:
+    def __init__(self, text: str, n_devices: int):
+        self.comps, self.entry = parse_module(text)
+        self.n_devices = n_devices
+        self._memo: Dict[Tuple[str, str], Cost] = {}
+
+    # -- helpers ---------------------------------------------------------------
+
+    def _operand_bytes(self, comp: Computation, instr: Instr) -> int:
+        return sum(_shape_bytes(comp.shapes.get(n, ""))
+                   for n in instr.operand_names())
+
+    def _dot_flops(self, comp: Computation, instr: Instr) -> float:
+        result = 1
+        for _, dims in _shape_dims(instr.shape):
+            for d in dims:
+                result *= d
+        ops = instr.operand_names()
+        lhs_shape = comp.shapes.get(ops[0], "") if ops else ""
+        lhs_dims = _shape_dims(lhs_shape)
+        contract = 1
+        m = _CONTRACT.search(instr.rest)
+        if m and lhs_dims:
+            dims = lhs_dims[0][1]
+            for idx in (int(i) for i in m.group(1).split(",") if i):
+                if idx < len(dims):
+                    contract *= dims[idx]
+        return 2.0 * result * contract
+
+    def _group_size(self, instr: Instr) -> int:
+        m = _GROUPS_IOTA.search(instr.rest)
+        if m:
+            return max(int(m.group(2)), 1)
+        m = _GROUPS_LIST.search(instr.rest)
+        if m:
+            first = [s for s in m.group(1).split(",") if s.strip() != ""]
+            return max(len(first), 1)
+        return self.n_devices
+
+    def _collective_wire(self, comp: Computation, instr: Instr,
+                         kind: str) -> float:
+        k = self._group_size(instr)
+        result_bytes = _shape_bytes(instr.shape)
+        operand_bytes = self._operand_bytes(comp, instr) or result_bytes
+        if kind == "all-reduce":
+            return 2.0 * (k - 1) / k * operand_bytes
+        if kind == "all-gather":
+            return (k - 1) / k * result_bytes
+        if kind in ("reduce-scatter", "all-to-all"):
+            return (k - 1) / k * operand_bytes
+        return float(result_bytes)       # collective-permute
+
+    def _trip_count(self, cond_name: str) -> Tuple[float, Optional[str]]:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1.0, f"missing while condition {cond_name}"
+        consts = {}
+        cmp_operands = None
+        for ins in comp.instrs:
+            m = _CONSTANT.search(ins.rest) if ins.opcode == "constant" else None
+            if ins.opcode == "constant":
+                mc = _CONSTANT.search("constant(" + ins.rest)
+                if mc:
+                    consts[ins.name] = int(mc.group(1))
+            if ins.opcode == "compare":
+                cmp_operands = ins.operand_names()
+        if cmp_operands:
+            for n in cmp_operands:
+                if n in consts:
+                    return float(consts[n]), None
+        # fallback: any constant in the condition
+        if consts:
+            return float(max(consts.values())), None
+        return 1.0, f"no trip count for {cond_name}"
+
+    # -- recursive cost ----------------------------------------------------------
+
+    def _fusion_bytes(self, comp: Computation, ins: Instr) -> float:
+        """HBM traffic of one fusion: slice-aware reads + root-aware writes.
+
+        A fusion whose parameters are only consumed through dynamic-slice
+        (xs slicing in a scan body) reads slices, not the whole buffer; a
+        fusion rooted in dynamic-update-slice writes the update, not the
+        whole buffer.  convert/bitcast/copy are traversed transparently —
+        XLA:CPU's bf16→f32 emulation inserts them around everything.
+        """
+        callee = self.comps.get(ins.attr("calls") or "")
+        if callee is None:
+            return self._operand_bytes(comp, ins) + _shape_bytes(ins.shape)
+        uses: Dict[str, List[Instr]] = {}
+        for i in callee.instrs:
+            for o in i.operand_names():
+                uses.setdefault(o, []).append(i)
+
+        def charged_read(name: str, depth: int = 0) -> Optional[float]:
+            """Bytes read from buffer `name`; None ⇒ fully read."""
+            if depth > 12:
+                return None
+            total = 0.0
+            for u in uses.get(name, []):
+                if u.opcode in ("convert", "bitcast", "copy", "transpose",
+                                "reshape"):
+                    sub = charged_read(u.name, depth + 1)
+                    if sub is None:
+                        return None
+                    total += sub
+                elif u.opcode in ("dynamic-slice", "slice", "gather"):
+                    total += _shape_bytes(u.shape)
+                elif u.opcode == "dynamic-update-slice":
+                    o = u.operand_names()
+                    if o and o[0] == name:
+                        continue       # pass-through buffer, not a read
+                    return None
+                else:
+                    return None
+            return total
+
+        read_bytes = 0.0
+        for i in callee.instrs:
+            if i.opcode != "parameter":
+                continue
+            eff = charged_read(i.name)
+            full = _shape_bytes(i.shape)
+            read_bytes += full if eff is None else min(eff, full)
+
+        by_name = {i.name: i for i in callee.instrs}
+        root = callee.instrs[-1] if callee.instrs else None
+        for _ in range(12):   # resolve through CPU-emulation convert chains
+            if root is None or root.opcode not in ("convert", "bitcast",
+                                                   "copy", "reshape"):
+                break
+            ops_ = root.operand_names()
+            root = by_name.get(ops_[0]) if ops_ else None
+        root_op = root.opcode if root else ""
+        if root_op == "dynamic-update-slice":
+            o = root.operand_names()
+            upd = callee.shapes.get(o[1], "") if len(o) > 1 else ins.shape
+            write_bytes = float(_shape_bytes(upd))
+        else:
+            write_bytes = float(_shape_bytes(ins.shape))
+        return read_bytes + write_bytes
+
+    def flops_only(self, comp_name: str) -> float:
+        """Dot flops inside a fused computation (bytes stay at the boundary)."""
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                total += self._dot_flops(comp, ins)
+            elif ins.opcode == "fusion":
+                callee = ins.attr("calls")
+                if callee:
+                    total += self.flops_only(callee)
+        return total
+
+    def cost_of(self, comp_name: str) -> Cost:
+        memo_key = ("cost", comp_name)
+        if memo_key in self._memo:
+            return self._memo[memo_key]
+        comp = self.comps.get(comp_name)
+        cost = Cost()
+        if comp is None:
+            cost.warnings.append(f"missing computation {comp_name}")
+            self._memo[memo_key] = cost
+            return cost
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op in _SKIP_OPS:
+                continue
+            if op == "while":
+                cond = ins.attr("condition")
+                body = ins.attr("body")
+                trip, warn = self._trip_count(cond) if cond else (1.0, "no cond")
+                if warn:
+                    cost.warnings.append(warn)
+                if body:
+                    cost.add(self.cost_of(body), trip)
+                continue
+            if op == "conditional":
+                branches = re.search(r"branch_computations=\{([^}]*)\}", ins.rest)
+                names = (_NAME_REF.findall(branches.group(1)) if branches
+                         else [n for n in [ins.attr("true_computation"),
+                                           ins.attr("false_computation")] if n])
+                if names:
+                    sub = Cost()
+                    for n in names:
+                        sub.add(self.cost_of(n), 1.0 / len(names))
+                    cost.add(sub)
+                    cost.warnings.append("conditional branch costs averaged")
+                continue
+            if op in ("call", "async-start"):
+                callee = ins.attr("to_apply") or ins.attr("called_computation")
+                if callee:
+                    cost.add(self.cost_of(callee))
+                continue
+            kind = next((c for c in COLLECTIVES if op.startswith(c)), None)
+            if kind is not None:
+                if op.endswith("-done"):
+                    continue
+                wire = self._collective_wire(comp, ins, kind)
+                cost.coll_bytes += wire
+                cost.coll_by_kind[kind] = cost.coll_by_kind.get(kind, 0) + wire
+                cost.n_collectives += 1
+                cost.bytes += self._operand_bytes(comp, ins) + _shape_bytes(ins.shape)
+                continue
+            if op == "dot":
+                cost.flops += self._dot_flops(comp, ins)
+                cost.bytes += self._operand_bytes(comp, ins) + _shape_bytes(ins.shape)
+                continue
+            if op == "fusion":
+                callee = ins.attr("calls")
+                if callee:
+                    cost.flops += self.flops_only(callee)
+                cost.bytes += self._fusion_bytes(comp, ins)
+                continue
+            if op in ("custom-call",):
+                # XLA:CPU sometimes lowers big matmuls to oneDNN custom-calls
+                if "matmul" in ins.rest or "dot" in ins.rest:
+                    cost.warnings.append("custom-call matmul not counted")
+                cost.bytes += self._operand_bytes(comp, ins) + _shape_bytes(ins.shape)
+                continue
+            # ops that touch a slice, not their full operands: charging the
+            # whole operand would bill a 64-iteration scan for 64 full-cache
+            # reads when each iteration slices one layer
+            if op in ("dynamic-slice", "slice", "gather", "broadcast"):
+                cost.bytes += 2 * _shape_bytes(ins.shape)
+                continue
+            if op == "dynamic-update-slice":
+                ops_ = ins.operand_names()
+                upd = (comp.shapes.get(ops_[1], "") if len(ops_) > 1 else
+                       ins.shape)
+                cost.bytes += 2 * _shape_bytes(upd)
+                continue
+            if op == "scatter":
+                ops_ = ins.operand_names()
+                upd = (comp.shapes.get(ops_[2], "") if len(ops_) > 2 else
+                       ins.shape)
+                cost.bytes += 2 * _shape_bytes(upd)
+                continue
+            if op == "convert":
+                # bf16<->f32 converts are XLA:CPU emulation artifacts; TPU
+                # computes bf16 natively and fuses genuine casts
+                continue
+            # plain top-level op (copy, reduce, select, transpose, ...)
+            cost.bytes += self._operand_bytes(comp, ins) + _shape_bytes(ins.shape)
+        self._memo[memo_key] = cost
+        return cost
+
+    def entry_cost(self) -> Cost:
+        entry = self.entry
+        if entry is None:
+            entry = next((n for n in self.comps if "main" in n),
+                         next(iter(self.comps)))
+        return self.cost_of(entry)
+
+
+def module_cost(text: str, n_devices: int) -> Cost:
+    return HloWalker(text, n_devices).entry_cost()
+
+
+def profile_bytes(text: str, n_devices: int, top: int = 20):
+    """Per-instruction byte attribution (trip-multiplied) — the 'profile'
+    the §Perf iterations read in place of a wall-clock trace."""
+    w = HloWalker(text, n_devices)
+    tally: Dict[str, float] = {}
+
+    def walk(comp_name: str, mult: float) -> None:
+        comp = w.comps.get(comp_name)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op in _SKIP_OPS:
+                continue
+            if op == "while":
+                trip, _ = w._trip_count(ins.attr("condition") or "")
+                body = ins.attr("body")
+                if body:
+                    walk(body, mult * trip)
+                continue
+            if op == "call":
+                callee = ins.attr("to_apply")
+                if callee:
+                    walk(callee, mult)
+                continue
+            if op == "conditional":
+                continue
+            if op == "fusion":
+                b = w._fusion_bytes(comp, ins)
+            elif op in ("dynamic-slice", "slice", "gather", "broadcast"):
+                b = 2 * _shape_bytes(ins.shape)
+            elif op == "dynamic-update-slice":
+                o = ins.operand_names()
+                upd = comp.shapes.get(o[1], "") if len(o) > 1 else ins.shape
+                b = 2 * _shape_bytes(upd)
+            elif op == "convert":
+                continue
+            else:
+                b = w._operand_bytes(comp, ins) + _shape_bytes(ins.shape)
+            tally[f"{op}:{ins.name}"] = tally.get(f"{op}:{ins.name}", 0) + b * mult
+
+    walk(w.entry or next(iter(w.comps)), 1.0)
+    return sorted(tally.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,198 @@
+"""Encoder-decoder (whisper-style) assembly.
+
+The audio frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed mel-frame embeddings (B, n_frames, d_model); the conv feature
+extractor the real Whisper uses is out of scope (modality frontends are
+explicitly stubbed, only the transformer backbone is exercised).
+
+Encoder: bidirectional full-attention blocks over frames.
+Decoder: causal self-attention + cross-attention to encoder output + MLP.
+Decode caches: per-layer self KV (grows) + cross KV (static, precomputed
+from the encoder output once per request).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.config import ModelConfig
+from repro.models.layers import (Params, embed, embed_shapes, materialize,
+                                 mlp, mlp_shapes, rms_norm, rms_norm_shapes,
+                                 sds, unembed)
+from repro.models.lm import ShardFn, _id_shard, _stack, ForwardOut
+
+
+def _enc_layer_shapes(cfg: ModelConfig) -> Params:
+    dt = cfg.param_dtype
+    return {"norm_attn": rms_norm_shapes(cfg.d_model, dt),
+            "attn": attn.attn_shapes(cfg),
+            "norm_mlp": rms_norm_shapes(cfg.d_model, dt),
+            "mlp": mlp_shapes(cfg.d_model, cfg.d_ff, dt)}
+
+
+def _dec_layer_shapes(cfg: ModelConfig) -> Params:
+    dt = cfg.param_dtype
+    return {"norm_self": rms_norm_shapes(cfg.d_model, dt),
+            "self_attn": attn.attn_shapes(cfg),
+            "norm_cross": rms_norm_shapes(cfg.d_model, dt),
+            "cross_attn": attn.attn_shapes(cfg),
+            "norm_mlp": rms_norm_shapes(cfg.d_model, dt),
+            "mlp": mlp_shapes(cfg.d_model, cfg.d_ff, dt)}
+
+
+def encdec_shapes(cfg: ModelConfig) -> Params:
+    dt = cfg.param_dtype
+    return {
+        "tok": embed_shapes(cfg.vocab_size, cfg.d_model, dt, cfg.tie_embeddings),
+        "enc_layers": _stack(_enc_layer_shapes(cfg), cfg.n_encoder_layers),
+        "dec_layers": _stack(_dec_layer_shapes(cfg), cfg.n_layers),
+        "norm_enc": rms_norm_shapes(cfg.d_model, dt),
+        "norm_dec": rms_norm_shapes(cfg.d_model, dt),
+    }
+
+
+def init_encdec(cfg: ModelConfig, key: jax.Array) -> Params:
+    return materialize(key, encdec_shapes(cfg))
+
+
+def _cross_attention(layer_params: Params, x: jax.Array, enc_kv, cfg,
+                     shard: ShardFn):
+    """Prefill-style cross attention: q from x, kv precomputed from encoder."""
+    dt = cfg.jnp_dtype()
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q, _, _ = attn.project_qkv(layer_params, x, positions, cfg, rope=False)
+    k, v = enc_kv
+    out = attn.flash_prefill(q, k, v, window=k.shape[1], chunk=cfg.attn_chunk,
+                             causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, layer_params["wo"].astype(dt))
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig,
+           shard: ShardFn = _id_shard) -> jax.Array:
+    """frames: (B, n_frames, d_model) stub embeddings -> encoder output."""
+    x = shard(frames.astype(cfg.jnp_dtype()), "act_btd")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, layer):
+        h = rms_norm(x, layer["norm_attn"], cfg.norm_eps)
+        q, k, v = attn.project_qkv(layer["attn"], h, positions, cfg)
+        o = attn.flash_prefill(q, k, v, window=s, chunk=cfg.attn_chunk,
+                               causal=False)
+        o = jnp.einsum("bshk,hkd->bsd", o, layer["attn"]["wo"].astype(x.dtype))
+        x = x + o
+        x = x + mlp(layer["mlp"], rms_norm(x, layer["norm_mlp"], cfg.norm_eps),
+                    cfg.jnp_dtype())
+        return shard(x, "act_btd"), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["norm_enc"], cfg.norm_eps)
+
+
+def cross_kv(params: Params, enc_out: jax.Array, cfg: ModelConfig):
+    """Precompute per-decoder-layer cross K/V: (L, B, n_frames, hk, hd)."""
+    dt = cfg.jnp_dtype()
+
+    def per_layer(layer):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, layer["cross_attn"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, layer["cross_attn"]["wv"].astype(dt))
+        return k, v
+
+    return jax.vmap(per_layer)(params["dec_layers"])
+
+
+def forward_hidden(params: Params, frames: jax.Array, tokens: jax.Array,
+                   cfg: ModelConfig, shard: ShardFn = _id_shard
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forced forward up to the final decoder norm: (B, S, d)."""
+    dtype = cfg.jnp_dtype()
+    enc_out = encode(params, frames, cfg, shard)
+    x = shard(embed(params["tok"], tokens, dtype), "act_btd")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    ck, cv = cross_kv(params, enc_out, cfg)
+
+    def body_cross(x, xs):
+        layer, k_cross, v_cross = xs
+        h = rms_norm(x, layer["norm_self"], cfg.norm_eps)
+        h, _ = attn.attention_prefill(layer["self_attn"], h, positions,
+                                      jnp.int32(s), cfg, shard)
+        x = x + h
+        h = rms_norm(x, layer["norm_cross"], cfg.norm_eps)
+        x = x + _cross_attention(layer["cross_attn"], h, (k_cross, v_cross),
+                                 cfg, shard)
+        x = x + mlp(layer["mlp"], rms_norm(x, layer["norm_mlp"], cfg.norm_eps),
+                    dtype)
+        return shard(x, "act_btd"), None
+
+    fn = body_cross
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
+    x, _ = jax.lax.scan(fn, x, (params["dec_layers"], ck, cv))
+    x = rms_norm(x, params["norm_dec"], cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def forward(params: Params, frames: jax.Array, tokens: jax.Array,
+            cfg: ModelConfig, shard: ShardFn = _id_shard) -> ForwardOut:
+    """Full teacher-forced forward: (B, n_frames, d) + (B, S) -> logits."""
+    x, aux = forward_hidden(params, frames, tokens, cfg, shard)
+    return ForwardOut(unembed(params["tok"], x, cfg.jnp_dtype()), aux)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    L = cfg.n_layers
+    kv = sds((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.dtype)
+    n_f = cfg.n_frontend_tokens
+    cross = sds((L, batch, n_f, cfg.n_kv_heads, cfg.head_dim), cfg.dtype)
+    return {"k": kv, "v": kv, "cross_k": cross, "cross_v": cross,
+            "length": sds((batch,), "int32")}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, batch, max_len))
+
+
+def decode_step(params: Params, token: jax.Array, cache: Params,
+                cfg: ModelConfig, shard: ShardFn = _id_shard):
+    """Scan over layers with cache xs/ys — see lm.decode_step."""
+    dtype = cfg.jnp_dtype()
+    x = shard(embed(params["tok"], token, dtype), "dec_btd")
+    length = cache["length"]
+    s_max = cache["k"].shape[2]
+
+    def body(x, xs):
+        layer, k_c, v_c, ck, cv = xs
+        h = rms_norm(x, layer["norm_self"], cfg.norm_eps)
+        h, (k_c, v_c) = attn.attention_decode(layer["self_attn"], h, k_c, v_c,
+                                              jnp.int32(s_max), length, cfg,
+                                              shard)
+        x = x + h
+        h = rms_norm(x, layer["norm_cross"], cfg.norm_eps)
+        h, _ = attn.attention_decode(layer["cross_attn"], h, ck, cv,
+                                     jnp.int32(ck.shape[1]), length, cfg,
+                                     shard, rope=False, cross=True)
+        x = x + h
+        x = x + mlp(layer["mlp"], rms_norm(x, layer["norm_mlp"], cfg.norm_eps),
+                    dtype)
+        return shard(x, "dec_btd"), (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = rms_norm(x, params["norm_dec"], cfg.norm_eps)
+    logits = unembed(params["tok"], x, dtype)
+    new_cache = dict(cache, k=k_new, v=v_new, length=length + 1)
+    return shard(logits, "dec_btv"), new_cache

@@ -1,0 +1,235 @@
+"""Sharding policy: parameter PartitionSpecs + activation constraints.
+
+Parallelism plan (DESIGN §5) over mesh axes ("pod", "data", "model"):
+
+  train:  batch over ("pod","data"); TP over "model" (heads / d_ff / vocab);
+          FSDP weight+optimizer storage over "data" (per-layer all-gather
+          inside the layer scan); MoE = expert-TP (expert hidden over
+          "model"), no all-to-all.
+  serve:  batch over "data" when divisible; KV cache sequence over "model"
+          (and over ("data","model") when batch=1, e.g. long_500k); weights
+          over "model" (+ "data" for MoE expert hidden — grok's 618GB of
+          experts must spread over all 256 chips).
+
+Every rule degrades gracefully: if a dim isn't divisible by its assigned
+axis, that dim falls back to replication (``_fit``) — this is how kv_heads=8
+archs and llava's 56 heads stay lowerable on a 16-wide model axis.  llava
+additionally flips attention to sequence-sharding (cfg.attn_shard =
+"sequence") so attention compute still spreads 16-way.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+AxisName = Any  # str | tuple[str, ...] | None
+
+
+def _axis_size(mesh: Mesh, axis: AxisName) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def _fit(mesh: Mesh, shape: Tuple[int, ...], wanted: Tuple[AxisName, ...]) -> P:
+    """Drop axes whose size doesn't divide the corresponding dim."""
+    spec = []
+    for dim, axis in zip(shape, wanted):
+        spec.append(axis if axis is not None and dim % _axis_size(mesh, axis) == 0
+                    else None)
+    return P(*spec)
+
+
+class ShardingPolicy:
+    """Produces param specs and a shard_fn for one (cfg, mesh, mode)."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, mode: str = "train"):
+        if mode not in ("train", "serve"):
+            raise ValueError(mode)
+        self.cfg = cfg
+        self.mesh = mesh
+        self.mode = mode
+        self.multi_pod = "pod" in mesh.axis_names
+        self.batch_axes: AxisName = (("pod", "data") if self.multi_pod else "data")
+        # FSDP storage axis for weights (train only)
+        self.fsdp: Optional[str] = "data" if mode == "train" else None
+
+    # -- parameters -----------------------------------------------------------
+
+    def param_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        m, fsdp = self.mesh, self.fsdp
+        name = path.split("/")[-1]
+        nd = len(shape)
+        if nd <= 1:
+            return P(None) if nd else P()
+        # embeddings: vocab over model, d over data (fsdp)
+        if name in ("embed",):
+            return _fit(m, shape, ("model", fsdp))
+        if name in ("unembed",):
+            return _fit(m, shape, (fsdp, "model"))
+        # attention projections (d, H, hd) / (H, hd, d) — path-scoped to avoid
+        # colliding with rwkv's 2-D wk/wv and MoE's 3-D wo
+        in_attn = any(k in path for k in ("attn/", "self_attn/", "cross_attn/"))
+        if in_attn and name in ("wq", "wk", "wv"):
+            return _fit(m, shape, (fsdp, "model", None))
+        if in_attn and name == "wo":
+            return _fit(m, shape, ("model", None, fsdp))
+        # MoE experts (E, d, f) / (E, f, d): 2-D (d × f) sharding over
+        # (data × model).  Sharding f over ("data","model") jointly was
+        # measured to make SPMD all-gather the *batch-sharded token buckets*
+        # across data instead (60 GiB/chip for grok prefill_32k) — d×f keeps
+        # tokens local and turns the conflict into a per-layer weight gather.
+        if nd == 3 and name in ("wi_gate", "wi_up"):
+            if self.mode == "serve":
+                return _fit(m, shape, (None, "data", "model"))
+            return _fit(m, shape, (None, fsdp, "model"))
+        if nd == 3 and name == "wo":
+            if self.mode == "serve":
+                return _fit(m, shape, (None, "model", "data"))
+            return _fit(m, shape, (None, "model", fsdp))
+        # dense MLP (d, f) / (f, d)
+        if name in ("wi_gate", "wi_up", "ck"):
+            return _fit(m, shape, (fsdp, "model"))
+        if name in ("wo", "cv"):
+            return _fit(m, shape, ("model", fsdp))
+        if name == "router":
+            return _fit(m, shape, (fsdp, None))
+        # mamba projections
+        if name == "in_proj":
+            return _fit(m, shape, (fsdp, "model"))
+        if name == "out_proj":
+            return _fit(m, shape, ("model", fsdp))
+        if name == "conv_w":
+            return _fit(m, shape, (None, "model"))
+        # rwkv square projections (d, d) and channel mix handled above
+        if name in ("wr", "wk", "wv", "wg", "wo_tm", "cr"):
+            return _fit(m, shape, (fsdp, "model"))
+        if name in ("lora_a_decay",):
+            return _fit(m, shape, (fsdp, None))
+        if name in ("lora_b_decay",):
+            return _fit(m, shape, (None, None))
+        return P(*([None] * nd))
+
+    def param_specs(self, shape_tree) -> Any:
+        def spec_of(path, leaf):
+            pname = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                             for p in path)
+            shape = tuple(leaf.shape)
+            # stacked layer params carry a leading n_layers dim — never sharded
+            if "layers" in pname and len(shape) >= 1:
+                inner = self.param_spec(pname, shape[1:])
+                return P(None, *inner)
+            return self.param_spec(pname, shape)
+        return jax.tree_util.tree_map_with_path(spec_of, shape_tree)
+
+    def param_shardings(self, shape_tree) -> Any:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.param_specs(shape_tree))
+
+    # -- activations ----------------------------------------------------------
+
+    def _heads_divisible(self, h: int) -> bool:
+        return h % _axis_size(self.mesh, "model") == 0
+
+    def act_spec(self, name: str, shape: Tuple[int, ...]) -> P:
+        cfg, m = self.cfg, self.mesh
+        batch = self.batch_axes
+        if name == "act_btd":          # (B, S, d)
+            if cfg.seq_shard_train and len(shape) > 1 and shape[1] > 1:
+                # sequence parallelism: residual stream S-sharded between
+                # blocks (train AND long-prefill); attention/MLP transitions
+                # reshard via all-to-all.  Decode (S=1) is unaffected.
+                return _fit(m, shape, (batch, "model", None))
+            return _fit(m, shape, (batch, None, None))
+        if name == "act_btv":          # logits (B, S, V)
+            return _fit(m, shape, (batch, None, "model"))
+        if name == "act_bshd":         # q/out (B, S, H, hd)
+            if cfg.attn_shard == "sequence" or not self._heads_divisible(shape[2]):
+                return _fit(m, shape, (batch, "model", None, None))
+            return _fit(m, shape, (batch, None, "model", None))
+        if name == "act_bskd":         # k/v (B, S, Hk, hd)
+            if self._heads_divisible(shape[2]) and cfg.attn_shard != "sequence":
+                return _fit(m, shape, (batch, None, "model", None))
+            return _fit(m, shape, (batch, None, None, None))
+        if name == "dec_btd":          # decode activations (B, 1, d)
+            return _fit(m, shape, (batch, None, None))
+        if name == "dec_btv":          # decode logits (B, 1, V)
+            return _fit(m, shape, (batch, None, "model"))
+        return P(*([None] * len(shape)))
+
+    def shard_fn(self):
+        def fn(x, name):
+            spec = self.act_spec(name, tuple(x.shape))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, spec))
+        return fn
+
+    # -- decode caches ----------------------------------------------------------
+
+    def cache_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        m = self.mesh
+        batch = self.batch_axes
+        name = path.split("/")[-1]
+        if name in ("k", "v", "attn_k", "attn_v", "cross_k", "cross_v",
+                    "k_local", "v_local", "k_global", "v_global"):
+            # (L|sites, B, S, Hk, hd): batch over data when divisible; heads
+            # over model when they divide (keeps the decode append a local
+            # dynamic_update_slice); otherwise sequence over model (append
+            # becomes a masked where — see attention.attention_decode).
+            # batch=1 long-context: spread the sequence over everything.
+            b, s, hk = shape[1], shape[2], shape[3]
+            if b % _axis_size(m, batch) == 0 and b >= _axis_size(m, batch):
+                if hk % _axis_size(m, "model") == 0:
+                    return _fit(m, shape, (None, batch, None, "model", None))
+                return _fit(m, shape, (None, batch, "model", None, None))
+            return _fit(m, shape, (None, None, ("data", "model"), None, None))
+        if name == "ssm":              # (L, B, H, P, N)
+            return _fit(m, shape, (None, batch, "model", None, None))
+        if name == "conv":             # (L, B, K-1, conv_dim)
+            return _fit(m, shape, (None, batch, None, "model"))
+        if name == "wkv":              # (L, B, H, K, V)
+            return _fit(m, shape, (None, batch, "model", None, None))
+        if name in ("shift_tm", "shift_cm"):
+            return _fit(m, shape, (None, batch, None))
+        if name == "length":           # per-slot lengths (B,)
+            return _fit(m, shape, (batch,))
+        return P(*([None] * len(shape)))
+
+    def kv_update_mode(self, batch: int, n_kv_heads: int) -> str:
+        """'dus' when the cache S-dim stays device-local (batch+heads shard),
+        else 'where' (masked elementwise append over the sharded S-dim)."""
+        bsz = _axis_size(self.mesh, self.batch_axes)
+        batch_ok = batch % bsz == 0 and batch >= bsz
+        heads_ok = n_kv_heads % _axis_size(self.mesh, "model") == 0
+        return "dus" if (batch_ok and heads_ok) else "where"
+
+    def cache_specs(self, cache_tree) -> Any:
+        def spec_of(path, leaf):
+            pname = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                             for p in path)
+            return self.cache_spec(pname, tuple(leaf.shape))
+        return jax.tree_util.tree_map_with_path(spec_of, cache_tree)
+
+    def cache_shardings(self, cache_tree) -> Any:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.cache_specs(cache_tree))
+
+    # -- batch inputs -----------------------------------------------------------
+
+    def batch_spec(self, name: str, shape: Tuple[int, ...]) -> P:
+        batch = self.batch_axes
+        if name in ("tokens", "labels", "loss_mask"):
+            return _fit(self.mesh, shape, (batch, None))
+        if name in ("frames", "frontend_embeddings"):
+            return _fit(self.mesh, shape, (batch, None, None))
+        if name == "token":            # decode input (B, 1)
+            return _fit(self.mesh, shape, (batch, None))
+        return P(*([None] * len(shape)))

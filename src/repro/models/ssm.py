@@ -1,0 +1,181 @@
+"""Mamba2 (SSD) block — chunked selective-state-space scan.
+
+Prefill uses the chunked SSD formulation (intra-chunk quadratic form +
+inter-chunk state recurrence), so activation memory is O(S·d + S/L·state)
+rather than O(S·state) per step — mandatory for 4k×256 training batches and
+the 500k long-context shape.  Decode is the exact single-step recurrence.
+
+Scalar-A-per-head variant (as in Mamba2), n_groups=1 (B, C shared across
+heads).  This is the jnp reference; ``kernels/mamba2`` holds the Pallas TPU
+kernel for the same math.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, sds
+
+MAMBA_HEAD_DIM = 64
+
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // MAMBA_HEAD_DIM
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def mamba_shapes(cfg: ModelConfig) -> Params:
+    dt = cfg.param_dtype
+    d = cfg.d_model
+    d_inner, h, n = mamba_dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        # in_proj → [z (d_inner), x (d_inner), B (n), C (n), dt (h)]
+        "in_proj": sds((d, 2 * d_inner + 2 * n + h), dt),
+        "conv_w": sds((cfg.ssm_conv, conv_dim), dt),
+        "conv_bias": sds((conv_dim,), dt),
+        "a_log": sds((h,), "float32"),
+        "d_skip": sds((h,), "float32"),
+        "dt_bias": sds((h,), "float32"),
+        "norm_gate": sds((d_inner,), dt),
+        "out_proj": sds((d_inner, d), dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """x: (B, S, C); w: (K, C) depthwise causal conv.  Returns (y, new_state)
+    where state carries the trailing K-1 inputs for decode."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(y + bias[None, None]), new_state
+
+
+def _split_proj(params: Params, u: jax.Array, cfg: ModelConfig):
+    d_inner, h, n = mamba_dims(cfg)
+    dt_ = cfg.jnp_dtype()
+    proj = jnp.einsum("bsd,de->bse", u, params["in_proj"].astype(dt_))
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt_raw = jnp.split(xbc_dt, [d_inner + 2 * n], axis=-1)
+    return z, xbc, dt_raw
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+                A: jax.Array, chunk: int,
+                h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x: (b, s, h, p)   per-head inputs
+    dt: (b, s, h)     softplus'd step sizes
+    B, C: (b, s, n)   shared input/output projections
+    A: (h,)           negative per-head decay rate
+    Returns (y (b,s,h,p), h_final (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    L = min(chunk, s)
+    if s % L:
+        L = s  # fall back to single chunk for awkward lengths
+    nc = s // L
+    # storage-dtype until inside the chunk body: eager fp32 casts of the full
+    # (B, S, ...) tensors would hold 2× sequence-length temps alive
+    xc = x.reshape(b, nc, L, h, p)
+    dtc = dt.reshape(b, nc, L, h)
+    Bc = B.reshape(b, nc, L, n)
+    Cc = C.reshape(b, nc, L, n)
+    A = A.astype(jnp.float32)
+
+    def chunk_step(h_in, inputs):
+        xb, dtb, Bb, Cb = inputs            # (b,L,h,p), (b,L,h), (b,L,n), (b,L,n)
+        xb = xb.astype(jnp.float32)
+        dtb = dtb.astype(jnp.float32)
+        Bb = Bb.astype(jnp.float32)
+        Cb = Cb.astype(jnp.float32)
+        dA = dtb * A[None, None]            # (b,L,h) log-decay per step (<=0)
+        cum = jnp.cumsum(dA, axis=1)        # inclusive cumulative log decay
+        # intra-chunk: M[b,h,t,s] = C_t·B_s · exp(cum_t - cum_s) · dt_s, s<=t
+        G = jnp.einsum("btn,bsn->bts", Cb, Bb)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]   # (b,t,s,h)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        # double-where: masked (s>t) entries have diff>0 whose exp overflows
+        # — harmless in the forward select but inf·0=NaN in the backward
+        safe = jnp.where(mask[None, :, :, None], diff, 0.0)
+        M = jnp.where(mask[None, :, :, None], jnp.exp(safe), 0.0)
+        M = M * G[..., None] * dtb[:, None, :, :]        # (b,t,s,h)
+        y_intra = jnp.einsum("btsh,bshp->bthp", M, xb)
+        # inter-chunk: y_inter[t] = (C_t · h_in) * exp(cum_t)
+        y_inter = jnp.einsum("btn,bhpn->bthp", Cb, h_in) * jnp.exp(cum)[..., None]
+        # state update: h_out = h_in*exp(cum_L) + Σ_s exp(cum_L-cum_s)·dt_s·x_s⊗B_s
+        w_last = jnp.exp(cum[:, -1])                     # (b,h)
+        scale = jnp.exp(cum[:, -1:, :] - cum) * dtb      # (b,L,h)
+        h_out = (h_in * w_last[:, :, None, None] +
+                 jnp.einsum("blh,blhp,bln->bhpn", scale, xb, Bb))
+        return h_out, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h_fin, ys = jax.lax.scan(chunk_step, h0,
+                             (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+                              jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y.astype(x.dtype), h_fin
+
+
+def mamba_prefill(params: Params, u: jax.Array, cfg: ModelConfig,
+                  chunk: int = 256):
+    """u: (B, S, d) -> (y (B, S, d), (conv_state, ssm_state))."""
+    d_inner, h, n = mamba_dims(cfg)
+    dt_ = cfg.jnp_dtype()
+    z, xbc, dt_raw = _split_proj(params, u, cfg)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"].astype(dt_),
+                                   params["conv_bias"].astype(dt_))
+    xin, B, C = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None])
+    A = -jnp.exp(params["a_log"])
+    xh = xin.reshape(*xin.shape[:2], h, MAMBA_HEAD_DIM)
+    if cfg.use_pallas:
+        from repro.kernels.mamba2 import ops as ssd_ops
+        y, ssm_state = ssd_ops.ssd(xh, dt, B, C, A, chunk=chunk)
+    else:
+        y, ssm_state = ssd_chunked(xh, dt, B, C, A, chunk)
+    y = y + xh.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+    y = y.reshape(*u.shape[:2], d_inner).astype(dt_)
+    y = y * jax.nn.silu(z)                               # gated
+    y = y * params["norm_gate"].astype(dt_)[None, None]
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_)), (
+        conv_state, ssm_state)
+
+
+def mamba_decode(params: Params, u: jax.Array, conv_state: jax.Array,
+                 ssm_state: jax.Array, cfg: ModelConfig):
+    """Single-token recurrence.  u: (B, 1, d); states from prefill/previous."""
+    d_inner, h, n = mamba_dims(cfg)
+    dt_ = cfg.jnp_dtype()
+    z, xbc, dt_raw = _split_proj(params, u, cfg)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"].astype(dt_),
+                                   params["conv_bias"].astype(dt_),
+                                   state=conv_state)
+    xin, B, C = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None])
+    A = -jnp.exp(params["a_log"])
+    xh = xin.reshape(xin.shape[0], 1, h, MAMBA_HEAD_DIM).astype(jnp.float32)
+    # h' = h·exp(dt·A) + dt·x⊗B ;  y = C·h' + D·x
+    decay = jnp.exp(dt[:, 0, :, None, None] * A[None, :, None, None])
+    upd = jnp.einsum("bhp,bn->bhpn", xh[:, 0] * dt[:, 0, :, None], B[:, 0])
+    ssm_state = ssm_state * decay + upd
+    y = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(jnp.float32), ssm_state)
+    y = y + xh[:, 0] * params["d_skip"][None, :, None]
+    y = y.reshape(u.shape[0], 1, d_inner).astype(dt_)
+    y = y * jax.nn.silu(z) * params["norm_gate"].astype(dt_)[None, None]
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_)), (
+        conv_state, ssm_state)

@@ -1,0 +1,8 @@
+"""Multi-model serving runtime: engines, continuous batching, routing."""
+from repro.serving.engine import (BaseEngine, EngineFailure, ModelEngine,
+                                  SimEngine)
+from repro.serving.request import Request, RequestState, Response
+from repro.serving.scheduler import PoolServer
+
+__all__ = ["BaseEngine", "EngineFailure", "ModelEngine", "SimEngine",
+           "Request", "RequestState", "Response", "PoolServer"]

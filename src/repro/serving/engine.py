@@ -1,0 +1,263 @@
+"""Per-model serving engines with slot-based continuous batching.
+
+Two backends behind one interface:
+
+  * ``ModelEngine``  — a real JAX model (reduced config on CPU, full config
+    on TPU): one jitted ``serve_step`` over a (max_batch,)-slot KV/state
+    cache with *per-slot lengths*; prompt tokens stream through the same
+    decode step (chunked prefill is a TODO noted in DESIGN), then greedy
+    generation until EOS/max_new_tokens.  New requests are admitted into
+    free slots between steps — in-flight requests are never stalled
+    (continuous batching).
+  * ``SimEngine``    — a timing/energy/accuracy model of a pool member
+    (paper's 16-model pool has no public weights in this container); used
+    by the paper-scale benchmarks.
+
+Both report per-query energy via the analytic TPU model (core.energy) — the
+zeus stand-in of DESIGN §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import CostModelParams, EnergyMonitor
+from repro.core.types import ModelProfile
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.serving.request import Request, RequestState, Response
+
+
+class EngineFailure(RuntimeError):
+    pass
+
+
+class BaseEngine:
+    """Interface shared by real and simulated engines."""
+
+    name: str
+    profile: ModelProfile
+
+    def submit(self, req: Request) -> None:
+        raise NotImplementedError
+
+    def step(self) -> List[Response]:
+        raise NotImplementedError
+
+    @property
+    def pending(self) -> int:
+        raise NotImplementedError
+
+    # -- fault-tolerance hooks -------------------------------------------------
+
+    def heartbeat(self) -> float:
+        return getattr(self, "_last_step_s", 0.0)
+
+    def inject_failure(self) -> None:
+        self._failed = True
+
+    def restart(self) -> List[Request]:
+        """Reset engine state; returns in-flight requests for re-queueing."""
+        raise NotImplementedError
+
+
+class ModelEngine(BaseEngine):
+    """Real-model engine: continuous batching over a slotted cache."""
+
+    def __init__(self, name: str, cfg: ModelConfig, key: jax.Array,
+                 max_batch: int = 4, max_len: int = 256,
+                 params=None, detokenize: Optional[Callable] = None):
+        self.name = name
+        self.cfg = dataclasses.replace(cfg, kv_update="where")
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.params = params if params is not None else api.init_params(
+            self.cfg, key)
+        self.cache = api.init_cache(self.cfg, max_batch, max_len)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self.detokenize = detokenize or (lambda toks: "")
+        self._failed = False
+        self._last_step_s = time.monotonic()
+        self.energy = EnergyMonitor()
+        self.cost_params = CostModelParams(
+            n_params=float(cfg.param_count()),
+            n_active_params=float(cfg.active_param_count()),
+            d_model=cfg.d_model, n_layers=cfg.n_layers,
+            kv_heads=max(cfg.n_kv_heads, 1), head_dim=cfg.head_dim)
+        self.profile = ModelProfile(
+            name=name, family=cfg.layout,
+            params_b=cfg.param_count() / 1e9, arch_config=cfg)
+        self.n_steps = 0
+
+        def _step(params, cache, tokens):
+            logits, cache = api.serve_step(params, tokens, cache, self.cfg)
+            return jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32), cache
+
+        self._jit_step = jax.jit(_step, donate_argnums=(1,))
+
+    # -- queueing ----------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        req.model_name = self.name
+        self.queue.append(req)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue) + sum(s is not None for s in self.slots)
+
+    def _admit(self) -> None:
+        for i in range(self.max_batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                if req.state == RequestState.CANCELLED:
+                    continue
+                req.slot = i
+                req.state = RequestState.PREFILL
+                req.start_s = time.monotonic()
+                self.slots[i] = req
+                # reset the slot's cache length so it starts fresh
+                self.cache["length"] = self.cache["length"].at[i].set(0)
+
+    # -- the continuous-batching step ---------------------------------------------
+
+    def step(self) -> List[Response]:
+        if self._failed:
+            raise EngineFailure(f"engine {self.name} failed")
+        self._admit()
+        self._last_step_s = time.monotonic()
+        if not any(self.slots):
+            return []
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if not req.prefill_done:
+                tokens[i, 0] = req.prompt_tokens[req.n_prompt_fed]
+            else:
+                tokens[i, 0] = (req.generated[-1] if req.generated
+                                else req.prompt_tokens[-1])
+        next_tok, self.cache = self._jit_step(self.params, self.cache,
+                                              jnp.asarray(tokens))
+        next_tok = np.asarray(next_tok)
+        self.n_steps += 1
+
+        finished: List[Response] = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if req.state == RequestState.CANCELLED:
+                self.slots[i] = None
+                continue
+            if not req.prefill_done:
+                req.n_prompt_fed += 1
+                if req.prefill_done:
+                    req.state = RequestState.DECODE
+                    req.generated.append(int(next_tok[i]))
+                continue
+            req.generated.append(int(next_tok[i]))
+            hit_eos = req.generated[-1] == req.eos_id
+            full = len(req.generated) >= req.max_new_tokens
+            overflow = int(self.cache["length"][i]) >= self.max_len - 1
+            if hit_eos or full or overflow:
+                finished.append(self._finish(i))
+        return finished
+
+    def _finish(self, slot: int) -> Response:
+        req = self.slots[slot]
+        self.slots[slot] = None
+        req.state = RequestState.DONE
+        req.finish_s = time.monotonic()
+        out = [t for t in req.generated if t != req.eos_id]
+        energy_wh = self.energy.measure_query(
+            self.cost_params, len(req.prompt_tokens), len(out))
+        return Response(
+            uid=req.uid, model_name=self.name, tokens=out,
+            text=self.detokenize(out), latency_ms=req.latency_ms,
+            queue_ms=(req.start_s - req.submit_s) * 1e3,
+            energy_wh=energy_wh, input_tokens=len(req.prompt_tokens),
+            output_tokens=len(out), hedged_winner=req.hedged)
+
+    def restart(self) -> List[Request]:
+        inflight = [r for r in self.slots if r is not None] + self.queue
+        for r in inflight:
+            r.state = RequestState.QUEUED
+            r.slot = -1
+            r.generated = []
+            r.n_prompt_fed = 0
+        self.slots = [None] * self.max_batch
+        self.queue = []
+        self.cache = api.init_cache(self.cfg, self.max_batch, self.max_len)
+        self._failed = False
+        return inflight
+
+
+class SimEngine(BaseEngine):
+    """Pool-member simulator: latency/energy/accuracy from profiles.
+
+    Used by the paper-scale benchmarks (16 models × 2500 queries in
+    seconds).  ``outcome_fn(query, model_name) -> (accuracy, energy_wh,
+    latency_ms, out_tokens)`` encapsulates the calibrated behaviour tables
+    (repro.data.profiles).
+    """
+
+    def __init__(self, profile: ModelProfile, outcome_fn,
+                 steps_per_query: int = 1):
+        self.name = profile.name
+        self.profile = profile
+        self.outcome_fn = outcome_fn
+        self.queue: List[Request] = []
+        self.steps_per_query = steps_per_query
+        self._failed = False
+        self._last_step_s = time.monotonic()
+        self._progress: Dict[int, int] = {}
+
+    def submit(self, req: Request) -> None:
+        req.model_name = self.name
+        self.queue.append(req)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def step(self) -> List[Response]:
+        if self._failed:
+            raise EngineFailure(f"engine {self.name} failed")
+        self._last_step_s = time.monotonic()
+        out: List[Response] = []
+        if not self.queue:
+            return out
+        req = self.queue[0]
+        if req.state == RequestState.CANCELLED:
+            self.queue.pop(0)
+            return out
+        k = self._progress.get(req.uid, 0) + 1
+        if k < self.steps_per_query:
+            self._progress[req.uid] = k
+            return out
+        self.queue.pop(0)
+        self._progress.pop(req.uid, None)
+        acc, energy_wh, latency_ms, out_tokens = self.outcome_fn(
+            req.query, self.name)
+        req.state = RequestState.DONE
+        req.finish_s = time.monotonic()
+        resp = Response(
+            uid=req.uid, model_name=self.name, tokens=[], text="",
+            latency_ms=latency_ms, queue_ms=0.0, energy_wh=energy_wh,
+            input_tokens=len(req.prompt_tokens), output_tokens=out_tokens)
+        resp.accuracy = acc  # type: ignore[attr-defined]
+        out.append(resp)
+        return out
+
+    def restart(self) -> List[Request]:
+        inflight = list(self.queue)
+        for r in inflight:
+            r.state = RequestState.QUEUED
+        self.queue = []
+        self._failed = False
+        return inflight

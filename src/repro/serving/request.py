@@ -1,0 +1,70 @@
+"""Serving request/response types and per-request lifecycle state."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import List, Optional
+
+from repro.core.types import Query
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"      # prompt tokens streaming into the cache
+    DECODE = "decode"        # generating
+    DONE = "done"
+    FAILED = "failed"
+    CANCELLED = "cancelled"  # hedged duplicate that lost the race
+
+
+@dataclasses.dataclass
+class Request:
+    query: Query
+    prompt_tokens: List[int]
+    max_new_tokens: int
+    eos_id: int = 0
+    # lifecycle
+    state: RequestState = RequestState.QUEUED
+    model_name: str = ""
+    slot: int = -1
+    generated: List[int] = dataclasses.field(default_factory=list)
+    n_prompt_fed: int = 0
+    submit_s: float = dataclasses.field(default_factory=time.monotonic)
+    start_s: float = 0.0
+    finish_s: float = 0.0
+    hedged: bool = False
+    hedge_of: Optional[int] = None   # uid of the primary request
+
+    @property
+    def uid(self) -> int:
+        return self.query.uid
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.n_prompt_fed >= len(self.prompt_tokens)
+
+    @property
+    def done(self) -> bool:
+        return self.state in (RequestState.DONE, RequestState.FAILED,
+                              RequestState.CANCELLED)
+
+    @property
+    def latency_ms(self) -> float:
+        if self.finish_s and self.submit_s:
+            return (self.finish_s - self.submit_s) * 1e3
+        return 0.0
+
+
+@dataclasses.dataclass
+class Response:
+    uid: int
+    model_name: str
+    tokens: List[int]
+    text: str
+    latency_ms: float
+    queue_ms: float
+    energy_wh: float
+    input_tokens: int
+    output_tokens: int
+    hedged_winner: bool = False

@@ -1,0 +1,189 @@
+"""GreenServ pool server: router → per-model engines → feedback loop.
+
+Implements the paper's online deployment (§4.4) with the production
+concerns of DESIGN §5:
+
+  * routing: every query goes through GreenServRouter (context → feasible →
+    LinUCB), execution through the selected model's engine, and the
+    measured (accuracy, energy, latency) closes the bandit loop;
+  * continuous operation: engines are stepped round-robin, admitting new
+    work between decode steps;
+  * straggler mitigation: a request stuck behind a deep queue past its
+    hedge deadline is duplicated onto the fastest feasible engine; the
+    first completion wins, the loser is cancelled (hedged requests);
+  * fault tolerance: engines carry heartbeats; a stalled or failed engine
+    is restarted and its in-flight requests re-queued (after router
+    re-routing, since the failed arm may be deprioritized);
+  * model addition (§6.3.4): ``add_engine`` registers a new pool member at
+    runtime — the router grows a fresh arm, zero offline calibration.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.pool import ModelPool
+from repro.core.router import GreenServRouter
+from repro.core.types import Feedback, ModelProfile, Query, RouterConfig
+from repro.serving.engine import BaseEngine, EngineFailure
+from repro.serving.request import Request, RequestState, Response
+
+
+class PoolServer:
+    def __init__(self, router: GreenServRouter,
+                 engines: Dict[str, BaseEngine],
+                 tokenizer: Optional[Callable[[str], List[int]]] = None,
+                 hedge_after_steps: Optional[int] = None,
+                 heartbeat_timeout_s: float = 30.0,
+                 accuracy_fn: Optional[Callable] = None):
+        names = router.pool.names
+        missing = [n for n in names if n not in engines]
+        if missing:
+            raise ValueError(f"engines missing for pool members: {missing}")
+        self.router = router
+        self.engines = engines
+        self.tokenizer = tokenizer or (lambda text: [1 + (ord(c) % 250)
+                                                     for c in text[:32]])
+        self.hedge_after_steps = hedge_after_steps
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.accuracy_fn = accuracy_fn
+        self.inflight: Dict[int, Request] = {}
+        self.hedges: Dict[int, Request] = {}
+        self.responses: Dict[int, Response] = {}
+        self.wait_steps: Dict[int, int] = {}
+        self.stats = {"hedges": 0, "restarts": 0, "completed": 0}
+
+    # -- pool growth (paper §6.3.4) ---------------------------------------------
+
+    def add_engine(self, profile: ModelProfile, engine: BaseEngine) -> None:
+        """Zero-calibration model addition: new engine + fresh bandit arm."""
+        self.engines[profile.name] = engine
+        self.router.pool.add(profile)   # fires the router's add-arm hook
+
+    # -- submission ---------------------------------------------------------------
+
+    def submit(self, query: Query) -> Request:
+        decision = self.router.route(query)
+        req = Request(query=query,
+                      prompt_tokens=self.tokenizer(query.text),
+                      max_new_tokens=query.max_new_tokens)
+        self.engines[decision.model_name].submit(req)
+        self.inflight[query.uid] = req
+        self.wait_steps[query.uid] = 0
+        return req
+
+    # -- hedged (straggler-mitigating) dispatch ------------------------------------
+
+    def _maybe_hedge(self) -> None:
+        if self.hedge_after_steps is None:
+            return
+        for uid, req in list(self.inflight.items()):
+            if req.done or uid in self.hedges or req.hedge_of is not None:
+                continue
+            if (req.state == RequestState.QUEUED
+                    and self.wait_steps[uid] >= self.hedge_after_steps):
+                # pick the least-loaded other engine as the hedge target
+                others = [(e.pending, n) for n, e in self.engines.items()
+                          if n != req.model_name]
+                if not others:
+                    continue
+                _, target = min(others)
+                hedge = Request(query=req.query,
+                                prompt_tokens=list(req.prompt_tokens),
+                                max_new_tokens=req.max_new_tokens,
+                                hedged=True, hedge_of=uid)
+                self.engines[target].submit(hedge)
+                self.hedges[uid] = hedge
+                self.stats["hedges"] += 1
+
+    # -- fault tolerance -------------------------------------------------------------
+
+    def _check_engines(self) -> None:
+        now = time.monotonic()
+        for name, eng in self.engines.items():
+            stalled = now - eng.heartbeat() > self.heartbeat_timeout_s
+            if stalled or getattr(eng, "_failed", False):
+                self._restart_engine(name)
+
+    def _restart_engine(self, name: str) -> None:
+        eng = self.engines[name]
+        inflight = eng.restart()
+        self.stats["restarts"] += 1
+        for req in inflight:
+            # re-route: the bandit may now prefer a different (healthy) arm
+            if req.hedge_of is not None:
+                continue
+            decision = self.router.route(req.query)
+            # drop the stale pending decision bookkeeping for the old route
+            self.inflight[req.uid] = req
+            self.engines[decision.model_name].submit(req)
+
+    # -- completion -------------------------------------------------------------------
+
+    def _complete(self, resp: Response, req: Request) -> None:
+        primary_uid = req.hedge_of if req.hedge_of is not None else req.uid
+        primary = self.inflight.get(primary_uid)
+        if primary is None or primary_uid in self.responses:
+            return                          # race already resolved
+        # cancel the loser of a hedged pair
+        if req.hedge_of is not None:        # hedge won
+            primary.state = RequestState.CANCELLED
+        elif primary_uid in self.hedges:    # primary won
+            self.hedges[primary_uid].state = RequestState.CANCELLED
+        accuracy = getattr(resp, "accuracy", None)
+        if accuracy is None:
+            accuracy = (self.accuracy_fn(primary.query, resp)
+                        if self.accuracy_fn else 0.0)
+        try:
+            self.router.feedback(Feedback(
+                query_uid=primary_uid, model_index=self.router.pool.index_of(
+                    resp.model_name),
+                accuracy=float(accuracy), energy_wh=resp.energy_wh,
+                latency_ms=resp.latency_ms,
+                input_tokens=resp.input_tokens,
+                output_tokens=resp.output_tokens))
+        except (KeyError, ValueError):
+            pass   # hedge finished on a non-routed arm: no bandit update
+        self.responses[primary_uid] = resp
+        self.inflight.pop(primary_uid, None)
+        self.hedges.pop(primary_uid, None)
+        self.wait_steps.pop(primary_uid, None)
+        self.stats["completed"] += 1
+
+    # -- main loop ---------------------------------------------------------------------
+
+    def step(self) -> List[Response]:
+        done: List[Response] = []
+        self._check_engines()
+        self._maybe_hedge()
+        for name, eng in self.engines.items():
+            try:
+                for resp in eng.step():
+                    req = self._find_request(resp.uid, name)
+                    if req is not None:
+                        self._complete(resp, req)
+                        done.append(resp)
+            except EngineFailure:
+                self._restart_engine(name)
+        for uid, req in self.inflight.items():
+            if req.state == RequestState.QUEUED:
+                self.wait_steps[uid] = self.wait_steps.get(uid, 0) + 1
+        return done
+
+    def _find_request(self, uid: int, engine_name: str) -> Optional[Request]:
+        req = self.inflight.get(uid)
+        if req is not None and req.model_name == engine_name:
+            return req
+        for primary_uid, hedge in self.hedges.items():
+            if hedge.uid == uid and hedge.model_name == engine_name:
+                return hedge
+        return req
+
+    def run_until_drained(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            if not self.inflight:
+                return
+            self.step()
+        raise TimeoutError(f"{len(self.inflight)} requests still in flight")

@@ -1,0 +1,15 @@
+"""Training substrate: AdamW, step factories, gradient compression."""
+from repro.train.compress import (compressed_psum, ef_compress, ef_init,
+                                  quantize_leaf, dequantize_leaf)
+from repro.train.optim import (OptConfig, adamw_update, cosine_lr,
+                               init_opt_state, opt_shapes)
+from repro.train.step import (StepBundle, make_opt_state, make_prefill_step,
+                              make_serve_step, make_train_step,
+                              opt_state_shapes)
+
+__all__ = [
+    "OptConfig", "adamw_update", "cosine_lr", "init_opt_state", "opt_shapes",
+    "StepBundle", "make_opt_state", "make_prefill_step", "make_serve_step",
+    "make_train_step", "opt_state_shapes", "compressed_psum", "ef_compress",
+    "ef_init", "quantize_leaf", "dequantize_leaf",
+]

@@ -1,0 +1,96 @@
+"""AdamW + cosine schedule in pure JAX, with sharded low-precision moments.
+
+Moments are stored in ``cfg.moment_dtype`` (fp32 default; bf16 for grok-314B
+where fp32 moments alone exceed the 16 GB/chip HBM budget) and promoted to
+fp32 inside the update.  Moment trees inherit the parameter PartitionSpecs,
+so ZeRO-style optimizer-state sharding falls out of the param sharding policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, sds
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"
+
+
+def cosine_lr(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_frac·lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def opt_shapes(param_tree: Params, cfg: OptConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree for the optimizer state (dry-run input spec)."""
+    mom = lambda s: sds(s.shape, cfg.moment_dtype)
+    return {"m": jax.tree.map(mom, param_tree),
+            "v": jax.tree.map(mom, param_tree),
+            "step": sds((), "int32")}
+
+
+def init_opt_state(params: Params, cfg: OptConfig) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.dtype(cfg.moment_dtype))
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads: Params, opt_state: Dict[str, Any], params: Params,
+                 cfg: OptConfig) -> Tuple[Params, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step; returns (params, opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = cosine_lr(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    mom_dt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * clip
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        mh = m32 / bc1
+        vh = v32 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p32
+        return ((p32 - lr * delta).astype(p.dtype),
+                m32.astype(mom_dt), v32.astype(mom_dt))
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.unflatten(treedef, [x[0] for x in flat])
+    new_m = jax.tree.unflatten(treedef, [x[1] for x in flat])
+    new_v = jax.tree.unflatten(treedef, [x[2] for x in flat])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,194 @@
+"""jit-ready step factories: train / prefill / serve with full shardings.
+
+Each factory returns a ``StepBundle`` carrying the function plus pytrees of
+NamedShardings for every input and output — ``jax.jit(bundle.fn,
+in_shardings=bundle.in_shardings, out_shardings=bundle.out_shardings)`` is
+exactly what the dry-run lowers and what the launchers execute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.models.sharding import ShardingPolicy, _fit
+from repro.train import optim
+from repro.train.compress import ef_compress, ef_init
+from repro.train.optim import OptConfig
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Callable
+    in_shardings: Any
+    out_shardings: Any
+    policy: ShardingPolicy
+    describe: str = ""
+
+
+def _named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_shardings(policy: ShardingPolicy, batch_tree) -> Any:
+    def spec_of(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        return NamedSharding(policy.mesh, policy.batch_spec(name, tuple(leaf.shape)))
+    return jax.tree_util.tree_map_with_path(spec_of, batch_tree)
+
+
+def _microbatch(batch: Dict[str, Any], n_micro: int) -> Dict[str, Any]:
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, example_batch: Dict[str, Any],
+                    opt_cfg: Optional[OptConfig] = None, n_micro: int = 1,
+                    use_ef_compress: bool = False,
+                    loss_chunk: int = 512) -> StepBundle:
+    """Full train step: microbatched grads → (optional) int8 error-feedback
+    compression → AdamW.  FSDP/TP/DP come from the ShardingPolicy."""
+    policy = ShardingPolicy(cfg, mesh, "train")
+    shard = policy.shard_fn()
+    ocfg = opt_cfg or OptConfig(moment_dtype=cfg.moment_dtype)
+
+    def compute_loss(params, mb):
+        loss, metrics = api.loss_fn(params, mb, cfg, shard,
+                                    loss_chunk=loss_chunk)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(compute_loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, aux_metrics), grads = grad_fn(params, batch)
+        else:
+            mbs = _microbatch(batch, n_micro)
+            accum_dt = jnp.dtype(cfg.grad_accum_dtype)
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dt), params)
+
+            def micro(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: (a.astype(jnp.float32)
+                                   + gi.astype(jnp.float32) / n_micro
+                                   ).astype(accum_dt), acc, g)
+                return acc, l
+
+            grads, losses = jax.lax.scan(micro, acc0, mbs)
+            loss = jnp.mean(losses)
+            aux_metrics = {}
+
+        ef = opt_state.get("ef")
+        if use_ef_compress:
+            grads, ef = ef_compress(grads, ef)
+
+        core = {"m": opt_state["m"], "v": opt_state["v"],
+                "step": opt_state["step"]}
+        params, core, om = optim.adamw_update(grads, core, params, ocfg)
+        new_opt = dict(core)
+        if use_ef_compress:
+            new_opt["ef"] = ef
+        metrics = {"loss": loss, **om, **aux_metrics}
+        return params, new_opt, metrics
+
+    # --- shardings -----------------------------------------------------------
+    param_tree = api.param_shapes(cfg)
+    pspecs = policy.param_specs(param_tree)
+    psh = _named(mesh, pspecs)
+    osh: Dict[str, Any] = {"m": psh, "v": psh,
+                           "step": NamedSharding(mesh, P())}
+    if use_ef_compress:
+        osh["ef"] = psh
+    bsh = _batch_shardings(policy, example_batch)
+    rep = NamedSharding(mesh, P())
+    metric_keys = {"loss": rep, "lr": rep, "grad_norm": rep}
+    if n_micro == 1:
+        metric_keys.update({"ce": rep, "aux": rep})
+    return StepBundle(
+        fn=train_step,
+        in_shardings=(psh, osh, bsh),
+        out_shardings=(psh, osh, metric_keys),
+        policy=policy,
+        describe=f"train_step n_micro={n_micro} ef={use_ef_compress}")
+
+
+def make_opt_state(cfg: ModelConfig, params, opt_cfg: Optional[OptConfig] = None,
+                   use_ef_compress: bool = False):
+    ocfg = opt_cfg or OptConfig(moment_dtype=cfg.moment_dtype)
+    state = optim.init_opt_state(params, ocfg)
+    if use_ef_compress:
+        state["ef"] = ef_init(params)
+    return state
+
+
+def opt_state_shapes(cfg: ModelConfig, opt_cfg: Optional[OptConfig] = None,
+                     use_ef_compress: bool = False):
+    ocfg = opt_cfg or OptConfig(moment_dtype=cfg.moment_dtype)
+    tree = optim.opt_shapes(api.param_shapes(cfg), ocfg)
+    if use_ef_compress:
+        from repro.models.layers import sds
+        tree["ef"] = jax.tree.map(lambda s: sds(s.shape, "float32"),
+                                  api.param_shapes(cfg))
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh,
+                      example_batch: Dict[str, Any]) -> StepBundle:
+    policy = ShardingPolicy(cfg, mesh, "serve")
+    shard = policy.shard_fn()
+
+    def prefill_step(params, batch):
+        return api.prefill(params, batch, cfg, shard)
+
+    param_tree = api.param_shapes(cfg)
+    psh = _named(mesh, policy.param_specs(param_tree))
+    bsh = _batch_shardings(policy, example_batch)
+    b = example_batch["tokens"].shape[0]
+    out = NamedSharding(mesh, _fit(mesh, (b, cfg.vocab_size),
+                                   ("data", "model")))
+    return StepBundle(fn=prefill_step, in_shardings=(psh, bsh),
+                      out_shardings=out, policy=policy, describe="prefill")
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, batch_size: int,
+                    seq_len: int) -> StepBundle:
+    """One-token decode against a KV/state cache of depth ``seq_len``."""
+    policy = ShardingPolicy(cfg, mesh, "serve")
+    cfg = dataclasses.replace(
+        cfg, kv_update=policy.kv_update_mode(batch_size, cfg.n_kv_heads))
+    shard = policy.shard_fn()
+
+    def serve_step(params, cache, token):
+        logits, new_cache = api.serve_step(params, token, cache, cfg, shard)
+        return logits, new_cache
+
+    param_tree = api.param_shapes(cfg)
+    psh = _named(mesh, policy.param_specs(param_tree))
+    cache_tree = api.cache_shapes(cfg, batch_size, seq_len)
+    csh = _named(mesh, policy.cache_specs(cache_tree))
+    tsh = NamedSharding(mesh, policy.batch_spec("token", (batch_size, 1)))
+    lsh = NamedSharding(
+        mesh, policy.act_spec("dec_btv", (batch_size, 1, cfg.vocab_size)))
+    return StepBundle(fn=serve_step, in_shardings=(psh, csh, tsh),
+                      out_shardings=(lsh, csh), policy=policy,
+                      describe=f"serve_step kv={seq_len}")

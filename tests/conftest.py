@@ -1,0 +1,28 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(only launch/dryrun.py fakes 512).  Multi-device tests run in subprocesses.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.types import RouterConfig
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def router_config():
+    return RouterConfig(lam=0.4, max_arms=24, energy_scale_wh=0.3)
+
+
+@pytest.fixture(scope="session")
+def prng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,120 @@
+"""Bandit math vs. numpy oracles (paper §4.3, Eq. 13)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bandits import BanditPolicy, init_state, add_arm
+from repro.core.types import RouterConfig
+
+
+def _oracle_linucb(A, b, x, alpha):
+    """Direct per-arm solve: θ = A⁻¹b; score = θᵀx + α√(xᵀA⁻¹x)."""
+    scores = []
+    for Am, bm in zip(A, b):
+        inv = np.linalg.inv(Am)
+        theta = inv @ bm
+        scores.append(theta @ x + alpha * np.sqrt(max(x @ inv @ x, 0)))
+    return np.array(scores)
+
+
+def _run_updates(policy, rng, n, d, n_arms):
+    for _ in range(n):
+        x = rng.standard_normal(d).astype(np.float32)
+        arm, _ = policy.select(x, np.ones(n_arms, bool))
+        policy.update(arm, x, float(rng.standard_normal()))
+
+
+@pytest.mark.parametrize("algo", ["linucb", "cts", "eps_greedy",
+                                  "eps_greedy_ctx"])
+def test_select_update_runs(algo, router_config, rng):
+    cfg = router_config
+    cfg.algorithm = algo
+    pol = BanditPolicy(cfg, n_arms=5)
+    _run_updates(pol, rng, 30, cfg.context_dim, 5)
+    counts = np.asarray(pol.state.counts)[:5]
+    assert counts.sum() == 30
+    assert np.all(np.isfinite(pol.state_dict()["theta"]))
+
+
+def test_linucb_scores_match_direct_inverse(router_config, rng):
+    cfg = router_config
+    pol = BanditPolicy(cfg, n_arms=4)
+    d = cfg.context_dim
+    _run_updates(pol, rng, 60, d, 4)
+    x = rng.standard_normal(d).astype(np.float32)
+    _, scores = pol.select(x, np.ones(4, bool))
+    st = pol.state_dict()
+    want = _oracle_linucb(st["A"][:4], st["b"][:4], x, cfg.alpha_ucb)
+    np.testing.assert_allclose(scores[:4], want, rtol=2e-4, atol=2e-4)
+
+
+def test_sherman_morrison_equals_cholesky_path(router_config, rng):
+    cfg = router_config
+    pol = BanditPolicy(cfg, n_arms=3)
+    _run_updates(pol, rng, 40, cfg.context_dim, 3)
+    x = rng.standard_normal(cfg.context_dim).astype(np.float32)
+    from repro.core.bandits import linucb_scores
+    sm = linucb_scores(pol.state, jnp.asarray(x), cfg.alpha_ucb,
+                       "sherman_morrison")
+    ch = linucb_scores(pol.state, jnp.asarray(x), cfg.alpha_ucb, "cholesky")
+    np.testing.assert_allclose(np.asarray(sm)[:3], np.asarray(ch)[:3],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_a_inv_consistency(router_config, rng):
+    """Maintained A⁻¹ stays the true inverse after many rank-1 updates."""
+    cfg = router_config
+    pol = BanditPolicy(cfg, n_arms=2)
+    _run_updates(pol, rng, 100, cfg.context_dim, 2)
+    st = pol.state_dict()
+    for m in range(2):
+        np.testing.assert_allclose(st["A_inv"][m], np.linalg.inv(st["A"][m]),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_add_arm_fresh_prior(router_config):
+    cfg = router_config
+    state = init_state(cfg, n_arms=3)
+    state, idx = add_arm(state, cfg)
+    assert idx == 3
+    assert bool(state.active[3])
+    d = cfg.context_dim
+    np.testing.assert_allclose(np.asarray(state.A[3]),
+                               np.eye(d) * cfg.lambda_reg)
+    np.testing.assert_allclose(np.asarray(state.b[3]), 0.0)
+
+
+def test_feasibility_mask_respected(router_config, rng):
+    cfg = router_config
+    pol = BanditPolicy(cfg, n_arms=6)
+    feas = np.array([False, True, False, True, False, False])
+    for _ in range(25):
+        x = rng.standard_normal(cfg.context_dim).astype(np.float32)
+        arm, _ = pol.select(x, feas)
+        assert feas[arm]
+        pol.update(arm, x, 0.1)
+
+
+def test_eps_decay(router_config, rng):
+    cfg = router_config
+    cfg.algorithm = "eps_greedy"
+    pol = BanditPolicy(cfg, n_arms=3)
+    eps0 = float(pol.state.eps)
+    _run_updates(pol, rng, 50, cfg.context_dim, 3)
+    assert float(pol.state.eps) == pytest.approx(
+        max(eps0 * cfg.epsilon_decay ** 50, cfg.epsilon_min), rel=1e-3)
+
+
+def test_state_dict_roundtrip(router_config, rng):
+    cfg = router_config
+    pol = BanditPolicy(cfg, n_arms=4)
+    _run_updates(pol, rng, 20, cfg.context_dim, 4)
+    blob = pol.state_dict()
+    pol2 = BanditPolicy(cfg, n_arms=4)
+    pol2.load_state_dict(blob)
+    x = rng.standard_normal(cfg.context_dim).astype(np.float32)
+    a1, s1 = pol.select(x, np.ones(4, bool))
+    a2, s2 = pol2.select(x, np.ones(4, bool))
+    assert a1 == a2
+    np.testing.assert_allclose(s1, s2, rtol=1e-6)

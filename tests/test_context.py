@@ -1,0 +1,105 @@
+"""Context generator: Flesch, k-means, task classifier, one-hot layout."""
+import numpy as np
+import pytest
+
+from repro.core.context import (ContextGenerator, FleschComplexity,
+                                OnlineKMeans, TaskClassifier,
+                                count_syllables, flesch_reading_ease)
+from repro.core.embedding import EmbeddingModel
+from repro.core.types import RouterConfig, TaskType
+from repro.data.stream import labeled_sample, make_stream
+
+
+def test_flesch_known_values():
+    easy = "The cat sat. The dog ran. We play all day."
+    hard = ("Institutional accountability necessitates comprehensive "
+            "regulatory harmonisation notwithstanding considerable "
+            "implementation uncertainty.")
+    assert flesch_reading_ease(easy) > 80
+    assert flesch_reading_ease(hard) < 20
+
+
+def test_flesch_clamped_and_empty():
+    assert 0.0 <= flesch_reading_ease("antidisestablishmentarianism " * 30) <= 100.0
+    assert flesch_reading_ease("") == 100.0
+
+
+def test_syllables():
+    assert count_syllables("cat") == 1
+    assert count_syllables("table") == 2
+    assert count_syllables("university") >= 4
+
+
+def test_binning_edges():
+    fc = FleschComplexity(n_bins=3)
+    assert fc.bin(0.0) == 0
+    assert fc.bin(33.2) == 0
+    assert fc.bin(34.0) == 1
+    assert fc.bin(99.9) == 2
+    assert fc.bin(100.0) == 2     # top edge folds into the last bin
+
+
+def test_kmeans_seeding_and_update():
+    km = OnlineKMeans(k=2, dim=3)
+    a = np.array([1.0, 0, 0], np.float32)
+    b = np.array([0, 1.0, 0], np.float32)
+    assert km.update(a) == 0
+    assert km.update(b) == 1      # distinct → seeds second centroid
+    c = km.update(np.array([0.9, 0.1, 0], np.float32))
+    assert c == 0
+    # Eq. 10: mu += (e - mu)/(N+1) with N=1 → midpoint-ish
+    np.testing.assert_allclose(km.centroids[0], [0.95, 0.05, 0.0], atol=1e-6)
+
+
+def test_kmeans_duplicate_seed_not_consumed():
+    km = OnlineKMeans(k=3, dim=2)
+    v = np.array([1.0, 0], np.float32)
+    km.update(v)
+    km.update(v)                  # same point: must not seed a new centroid
+    assert km._initialized == 1
+
+
+def test_task_classifier_learns_stream_tasks():
+    emb = EmbeddingModel()
+    clf = TaskClassifier(emb)
+    texts, labels = labeled_sample(n_per_task=30)
+    acc = clf.fit(texts, labels, steps=200)
+    assert acc > 0.9
+    # held-out sample
+    texts2, labels2 = labeled_sample(n_per_task=10, seed=99)
+    preds = [clf.predict(t) for t in texts2]
+    assert np.mean(np.array(preds) == np.array(labels2)) > 0.8
+
+
+def test_context_vector_layout(router_config):
+    gen = ContextGenerator(router_config)
+    x = gen.encode(task_label=2, cluster=1, comp_bin=0)
+    cfg = router_config
+    assert x.shape == (cfg.context_dim,)
+    assert x[2] == 1.0                             # task one-hot
+    assert x[cfg.n_tasks + 1] == 1.0               # cluster one-hot
+    assert x[cfg.n_tasks + cfg.n_clusters + 0] == 1.0
+    assert x[-1] == 1.0                            # intercept
+    assert x.sum() == 4.0
+
+
+def test_feature_ablation_toggles(router_config):
+    gen = ContextGenerator(router_config)
+    gen.set_features(task=False, cluster=False, complexity=False)
+    x = gen("Some query text for ablation.")
+    assert x.vector.sum() == 1.0                   # intercept only
+
+
+def test_paper_context_dim_is_12():
+    cfg = RouterConfig(n_clusters=3, n_complexity_bins=3)
+    assert cfg.context_dim == 12                   # 5 + 3 + 3 + 1 (§6.1.5)
+
+
+def test_stream_composition():
+    qs = make_stream(per_task=10)
+    assert len(qs) == 50
+    per = {t: 0 for t in TaskType}
+    for q in qs:
+        per[q.task] += 1
+    assert all(v == 10 for v in per.values())
+    assert len({q.uid for q in qs}) == 50

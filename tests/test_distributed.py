@@ -1,0 +1,145 @@
+"""Checkpointing, elastic re-meshing, fault detection."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.elastic import plan_remesh
+from repro.distributed.fault import HeartbeatMonitor, StragglerDetector
+from repro.launch.mesh import make_host_mesh
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"layer": {"w": jnp.asarray(rng.standard_normal((4, 8)),
+                                       jnp.float32),
+                      "b": jnp.asarray(rng.standard_normal(8), jnp.bfloat16)},
+            "step_count": jnp.int32(7)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 10, t, extra={"step": 10, "note": "hi"})
+    like = jax.tree.map(jnp.zeros_like, t)
+    restored, extra = ckpt.restore(tmp_path, like)
+    assert extra["note"] == "hi"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_latest_pointer_and_prune(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        ckpt.save(tmp_path, s, t)
+    assert ckpt.latest_step(tmp_path) == 4
+    ckpt.prune(tmp_path, keep=2)
+    dirs = sorted(p.name for p in pathlib.Path(tmp_path).glob("step_*"))
+    assert len(dirs) == 2
+    assert ckpt.latest_step(tmp_path) == 4
+
+
+def test_interrupted_write_never_corrupts(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 1, t)
+    # simulate a crash mid-write of step 2: stray tmp dir with partial data
+    tmp = pathlib.Path(tmp_path) / "step_000000002.tmp"
+    tmp.mkdir()
+    (tmp / "leaf_00000.npy").write_bytes(b"garbage")
+    assert ckpt.latest_step(tmp_path) == 1          # LATEST untouched
+    restored, _ = ckpt.restore(tmp_path, jax.tree.map(jnp.zeros_like, t))
+    np.testing.assert_array_equal(np.asarray(restored["layer"]["w"]),
+                                  np.asarray(t["layer"]["w"]))
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    ckpt.save(tmp_path, 1, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        ckpt.restore(tmp_path, {"w": jnp.zeros((3, 3))})
+
+
+def test_remesh_plan_single_pod():
+    mesh = make_host_mesh()  # (1, 1) — use shapes math on a synthetic mesh
+    from repro.launch.mesh import make_mesh
+    # pretend 16x16 pod lost 18 chips → data shrinks 16→14
+    import jax as _jax
+    if len(_jax.devices()) == 1:
+        # shape math only (can't build a 256-device mesh here)
+        from repro.distributed.elastic import RemeshPlan
+        plan = RemeshPlan(old_shape=(16, 16), new_shape=(14, 16),
+                          axes=("data", "model"), lost_chips=18,
+                          batch_policy="hold", n_micro_multiplier=2)
+        assert plan.new_data_parallel == 14
+    m = make_mesh((1, 1), ("data", "model"))
+    plan = plan_remesh(m, 0)
+    assert plan.new_shape == (1, 1)
+
+
+def test_remesh_plan_math_8dev_subprocess():
+    import subprocess, sys, os, textwrap
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        from repro.launch.mesh import make_mesh
+        from repro.distributed.elastic import plan_remesh, build_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
+        plan = plan_remesh(mesh, lost_chips=2, batch_policy="hold")
+        assert plan.new_shape == (3, 2), plan
+        assert plan.n_micro_multiplier == 2, plan
+        m2 = build_mesh(plan)
+        assert m2.devices.size == 6
+        print("OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code],
+                       cwd=os.path.join(os.path.dirname(__file__), ".."),
+                       capture_output=True, text=True, timeout=300)
+    assert "OK" in r.stdout, r.stderr[-2000:]
+
+
+def test_heartbeat_monitor():
+    mon = HeartbeatMonitor(timeout_s=0.0)
+    mon.register("w0")
+    assert mon.stale() == ["w0"]
+    mon2 = HeartbeatMonitor(timeout_s=60.0)
+    mon2.register("w1")
+    assert mon2.stale() == []
+
+
+def test_straggler_detector():
+    det = StragglerDetector(k=2.0)
+    for w in ("a", "b", "c", "d"):
+        det.record(w, 1.0)
+    det.record("d", 5.0)
+    assert det.stragglers() == ["d"]
+    # global slowdown: nobody flagged
+    det2 = StragglerDetector(k=2.0)
+    for w in ("a", "b", "c", "d"):
+        det2.record(w, 10.0)
+    assert det2.stragglers() == []
+
+
+def test_router_state_checkpoints_with_same_machinery(tmp_path):
+    from repro.core.pool import ModelPool
+    from repro.core.router import GreenServRouter
+    from repro.core.types import (Feedback, ModelProfile, Query,
+                                  RouterConfig)
+    pool = ModelPool([ModelProfile(name=f"m{i}", family="x", params_b=1.0)
+                      for i in range(3)])
+    r = GreenServRouter(RouterConfig(max_arms=8), pool)
+    for uid in range(5):
+        q = Query(uid=uid, text=f"Answer the question.\nQ{uid}?")
+        d = r.route(q)
+        r.feedback(Feedback(query_uid=uid, model_index=d.model_index,
+                            accuracy=0.7, energy_wh=0.02, latency_ms=9.0))
+    ckpt.save(tmp_path, 5, r.state_dict()["bandit"],
+              extra={"n_routed": r.n_routed})
+    like = jax.tree.map(np.zeros_like, r.state_dict()["bandit"])
+    blob, extra = ckpt.restore(tmp_path, like)
+    assert extra["n_routed"] == 5
+    np.testing.assert_allclose(np.asarray(blob["counts"]),
+                               r.state_dict()["bandit"]["counts"])

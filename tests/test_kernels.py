@@ -1,0 +1,139 @@
+"""Per-kernel shape/dtype sweeps asserted against the pure-jnp oracles
+(interpret mode executes the kernel bodies in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.linucb.ops import linucb_scores
+from repro.kernels.linucb.ref import linucb_scores_ref
+from repro.kernels.mamba2.ops import ssd
+from repro.kernels.mamba2.ref import ssd_ref
+from repro.kernels.moe_gating.ops import topk_gating
+from repro.kernels.moe_gating.ref import topk_gating_ref
+from repro.kernels.rwkv6.ops import wkv
+from repro.kernels.rwkv6.ref import wkv_ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("b,sq,sk,hq,hk,hd,win,causal", [
+    (2, 128, 128, 4, 2, 64, 128, True),
+    (1, 256, 256, 8, 8, 32, 64, True),      # sliding window
+    (2, 64, 192, 4, 4, 64, 192, False),     # cross attention
+    (1, 128, 128, 6, 2, 128, 10_000, True), # GQA group 3
+])
+def test_flash_attention(dtype, b, sq, sk, hq, hk, hd, win, causal):
+    ks = jax.random.split(jax.random.PRNGKey(sq + hq), 3)
+    q = _rand(ks[0], (b, sq, hq, hd), dtype)
+    k = _rand(ks[1], (b, sk, hk, hd), dtype)
+    v = _rand(ks[2], (b, sk, hk, hd), dtype)
+    out = flash_attention(q, k, v, window=win, chunk=64, causal=causal,
+                          interpret=True)
+    ref = attention_ref(q, k, v, window=win, causal=causal)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_dynamic_window():
+    """One compiled kernel must serve different traced windows (gemma3)."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (1, 128, 4, 64), jnp.float32)
+    k = _rand(ks[1], (1, 128, 4, 64), jnp.float32)
+    v = _rand(ks[2], (1, 128, 4, 64), jnp.float32)
+    fn = jax.jit(lambda w: flash_attention(q, k, v, window=w, chunk=64,
+                                           interpret=True))
+    for w in (16, 64, 128):
+        np.testing.assert_allclose(
+            np.asarray(fn(jnp.int32(w))),
+            np.asarray(attention_ref(q, k, v, window=w)), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("b,s,hq,hk,hd,clen,win", [
+    (2, 1024, 8, 2, 64, 700, 10_000),
+    (1, 2048, 4, 4, 128, 2047, 256),
+    (3, 512, 6, 2, 64, 5, 10_000),
+])
+def test_decode_attention(dtype, b, s, hq, hk, hd, clen, win):
+    ks = jax.random.split(jax.random.PRNGKey(s + clen), 3)
+    q = _rand(ks[0], (b, 1, hq, hd), dtype)
+    k = _rand(ks[1], (b, s, hk, hd), dtype)
+    v = _rand(ks[2], (b, s, hk, hd), dtype)
+    out = decode_attention(q, k, v, window=win, cache_len=clen, block_k=256,
+                           interpret=True)
+    ref = decode_attention_ref(q, k, v, window=win, cache_len=clen)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("t,e,k", [(256, 8, 2), (128, 60, 4), (64, 16, 1),
+                                   (512, 32, 4)])
+def test_moe_gating(t, e, k):
+    logits = jax.random.normal(jax.random.PRNGKey(t + e), (t, e), jnp.float32)
+    w, i = topk_gating(logits, k, block_t=64, interpret=True)
+    wr, ir = topk_gating_ref(logits, k)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(w), np.asarray(wr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w).sum(-1), 1.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,s,h,kd,chunk", [(1, 64, 1, 64, 16),
+                                            (2, 96, 3, 64, 32)])
+def test_rwkv6_wkv(b, s, h, kd, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(b * s), 6)
+    r = jax.random.normal(ks[0], (b, s, h, kd)) * 0.5
+    k = jax.random.normal(ks[1], (b, s, h, kd)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, kd)) * 0.5
+    logw = -jnp.exp(jax.random.uniform(ks[3], (b, s, h, kd),
+                                       minval=-6.0, maxval=-2.0))
+    u = jax.random.normal(ks[4], (h, kd)) * 0.5
+    s0 = jax.random.normal(ks[5], (b, h, kd, kd)) * 0.1
+    y, sf = wkv(r, k, v, logw, u, s0=s0, chunk=chunk, interpret=True)
+    yr, sfr = wkv_ref(r, k, v, logw, u, s0=s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sfr),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [(1, 64, 2, 64, 16, 16),
+                                             (2, 96, 1, 64, 64, 32)])
+def test_mamba2_ssd(b, s, h, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(b + s), 4)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    B = jax.random.normal(ks[2], (b, s, n)) * 0.5
+    C = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    A = -jnp.exp(jax.random.uniform(jax.random.PRNGKey(7), (h,),
+                                    minval=0.0, maxval=1.5))
+    y, hf = ssd(x, dt, B, C, A, chunk=chunk, interpret=True)
+    yr, hfr = ssd_ref(x, dt, B, C, A)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hfr),
+                               atol=3e-4, rtol=3e-4)
+
+
+@pytest.mark.parametrize("m,d,q,alpha", [(16, 12, 1, 0.1), (8, 64, 32, 0.5),
+                                         (64, 128, 128, 0.1)])
+def test_linucb_kernel(m, d, q, alpha):
+    ks = jax.random.split(jax.random.PRNGKey(m + d), 3)
+    L = jax.random.normal(ks[0], (m, d, d)) * 0.2
+    a_inv = jnp.einsum("mij,mkj->mik", L, L) + jnp.eye(d)[None]
+    theta = jax.random.normal(ks[1], (m, d))
+    x = jax.random.normal(ks[2], (q, d))
+    out = linucb_scores(a_inv, theta, x, alpha, interpret=True)
+    ref = linucb_scores_ref(a_inv, theta, x, alpha)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)

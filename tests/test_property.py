@@ -1,0 +1,117 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bandits import BanditPolicy
+from repro.core.context import FleschComplexity, OnlineKMeans
+from repro.core.rewards import RegretTracker, scalarize
+from repro.core.types import RouterConfig
+from repro.train.compress import dequantize_leaf, quantize_leaf
+
+import jax.numpy as jnp
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(acc=st.floats(0, 1), energy=st.floats(0, 10),
+       lam=st.floats(0, 1))
+@settings(**_SETTINGS)
+def test_scalarized_reward_bounds(acc, energy, lam):
+    """Eq. 5: r ∈ [−λ·E/scale, 1−λ] and monotone in both objectives."""
+    r = scalarize(acc, energy, lam, energy_scale_wh=1.0)
+    assert -lam * energy - 1e-9 <= r <= (1 - lam) + 1e-9
+    assert scalarize(min(acc + 0.1, 1.0), energy, lam) >= r - 1e-9
+    assert scalarize(acc, energy + 0.1, lam) <= r + 1e-9
+
+
+@given(st.lists(st.tuples(st.floats(-1, 1), st.floats(-1, 1)),
+                min_size=1, max_size=60))
+@settings(**_SETTINGS)
+def test_regret_nonneg_and_monotone(pairs):
+    t = RegretTracker()
+    prev = 0.0
+    for chosen, oracle in pairs:
+        t.step(chosen, oracle)
+        assert t.cumulative >= prev - 1e-12
+        prev = t.cumulative
+    assert len(t.history) == len(pairs)
+
+
+@given(data=st.data())
+@settings(**_SETTINGS)
+def test_sherman_morrison_inverse_consistency(data):
+    """A_inv stays A⁻¹ under arbitrary (x, r) update streams."""
+    cfg = RouterConfig(max_arms=4, n_clusters=2, n_complexity_bins=2)
+    pol = BanditPolicy(cfg, n_arms=2)
+    d = cfg.context_dim
+    n = data.draw(st.integers(1, 25))
+    for i in range(n):
+        vals = data.draw(st.lists(
+            st.floats(-2, 2, allow_nan=False), min_size=d, max_size=d))
+        x = np.array(vals, np.float32)
+        r = data.draw(st.floats(-1, 1, allow_nan=False))
+        pol.update(i % 2, x, r)
+    st_ = pol.state_dict()
+    for m in range(2):
+        np.testing.assert_allclose(
+            st_["A_inv"][m] @ st_["A"][m], np.eye(d), atol=5e-2)
+
+
+@given(data=st.data())
+@settings(**_SETTINGS)
+def test_router_never_selects_infeasible(data):
+    cfg = RouterConfig(max_arms=8)
+    pol = BanditPolicy(cfg, n_arms=6)
+    for i in range(data.draw(st.integers(1, 20))):
+        feas = np.array(data.draw(st.lists(st.booleans(), min_size=6,
+                                           max_size=6)))
+        if not feas.any():
+            feas[0] = True
+        x = np.array(data.draw(st.lists(st.floats(-1, 1, allow_nan=False),
+                                        min_size=cfg.context_dim,
+                                        max_size=cfg.context_dim)),
+                     np.float32)
+        arm, _ = pol.select(x, feas)
+        assert feas[arm]
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                max_size=64))
+@settings(**_SETTINGS)
+def test_int8_quantization_error_bound(vals):
+    """|x − deq(q(x))| ≤ scale/2 = max|x|/254 per element."""
+    x = jnp.asarray(np.array(vals, np.float32))
+    q, scale = quantize_leaf(x)
+    err = np.abs(np.asarray(dequantize_leaf(q, scale)) - np.asarray(x))
+    assert err.max() <= float(scale) / 2 + 1e-7
+
+
+@given(st.integers(1, 5), st.lists(
+    st.lists(st.floats(-1, 1, allow_nan=False), min_size=4, max_size=4),
+    min_size=1, max_size=30))
+@settings(**_SETTINGS)
+def test_kmeans_centroids_in_convex_hull_bounds(k, points):
+    km = OnlineKMeans(k=k, dim=4)
+    arr = np.array(points, np.float32)
+    for p in arr:
+        c = km.update(p)
+        assert 0 <= c < k
+    live = km.centroids[: km._initialized]
+    assert np.all(live >= arr.min() - 1e-6)
+    assert np.all(live <= arr.max() + 1e-6)
+
+
+@given(st.floats(-50, 150), st.integers(1, 10))
+@settings(**_SETTINGS)
+def test_flesch_bin_in_range(score, n_bins):
+    fc = FleschComplexity(n_bins=n_bins)
+    assert 0 <= fc.bin(score) < n_bins
+
+
+@given(st.floats(0, 1), st.floats(0, 1))
+@settings(**_SETTINGS)
+def test_energy_model_monotonicity(f_scale, b_scale):
+    from repro.core.energy import energy_joules, roofline
+    base = roofline(1e12, 1e9, 1e6, chips=4)
+    more = roofline(1e12 * (1 + f_scale), 1e9 * (1 + b_scale), 1e6, chips=4)
+    assert energy_joules(more) >= energy_joules(base) - 1e-9

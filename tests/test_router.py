@@ -1,0 +1,108 @@
+"""Router behaviour: Algorithm 1 loop, feasibility, model addition, regret."""
+import numpy as np
+import pytest
+
+from repro.core.pool import ModelPool
+from repro.core.rewards import RegretTracker, scalarize
+from repro.core.router import GreenServRouter
+from repro.core.types import (Feedback, ModelProfile, Query, RouterConfig,
+                              TaskType)
+
+
+def _pool(n=4):
+    return ModelPool([ModelProfile(name=f"m{i}", family="t",
+                                   params_b=float(i + 1),
+                                   ms_per_token=float(i + 1),
+                                   prefill_ms=10.0)
+                      for i in range(n)])
+
+
+def _router(n=4, **kw):
+    cfg = RouterConfig(max_arms=16, **kw)
+    return GreenServRouter(cfg, _pool(n))
+
+
+def test_route_feedback_cycle():
+    r = _router()
+    q = Query(uid=1, text="Answer the question.\nWhat is entropy?",
+              task=TaskType.QA)
+    d = r.route(q)
+    assert 0 <= d.model_index < 4
+    rew = r.feedback(Feedback(query_uid=1, model_index=d.model_index,
+                              accuracy=0.8, energy_wh=0.05, latency_ms=30.0))
+    assert rew == pytest.approx(scalarize(0.8, 0.05, r.config.lam,
+                                          r.config.energy_scale_wh))
+
+
+def test_feedback_without_route_raises():
+    r = _router()
+    with pytest.raises(KeyError):
+        r.feedback(Feedback(query_uid=99, model_index=0, accuracy=1.0,
+                            energy_wh=0.0, latency_ms=0.0))
+
+
+def test_latency_feasibility_filter():
+    r = _router()
+    # budget only the fastest model can meet: m0 = 10 + 1*t
+    q = Query(uid=2, text="hello world question", max_new_tokens=50,
+              latency_budget_ms=70.0)
+    d = r.route(q)
+    assert d.model_name == "m0"
+    assert d.feasible_mask.tolist() == [True, False, False, False]
+
+
+def test_infeasible_all_degrades_to_fastest():
+    r = _router()
+    q = Query(uid=3, text="hi there", max_new_tokens=1000,
+              latency_budget_ms=1.0)
+    d = r.route(q)
+    assert d.model_name == "m0"   # fastest fallback, never a dropped query
+
+
+def test_model_addition_grows_arm(capsys):
+    r = _router(3)
+    assert r.policy.n_arms == 3
+    r.pool.add(ModelProfile(name="new", family="t", params_b=9.0))
+    assert r.policy.n_arms == 4
+    q = Query(uid=4, text="route me somewhere useful")
+    d = r.route(q)
+    assert d.feasible_mask.shape[0] == 4
+
+
+def test_learning_prefers_better_arm():
+    """After enough feedback, the router should exploit the best arm."""
+    r = _router(3, alpha_ucb=0.05)
+    rng = np.random.default_rng(0)
+    best = 1
+    for uid in range(300):
+        q = Query(uid=uid, text=f"Answer the question.\nQ {uid} about topic")
+        d = r.route(q)
+        acc = 0.9 if d.model_index == best else 0.3
+        r.feedback(Feedback(query_uid=uid, model_index=d.model_index,
+                            accuracy=acc + rng.normal(0, 0.02),
+                            energy_wh=0.05, latency_ms=10.0))
+    counts = r.selection_counts()
+    assert counts[best] == max(counts)
+    assert counts[best] > 150
+
+
+def test_regret_tracker_math():
+    t = RegretTracker()
+    assert t.step(0.5, 0.9) == pytest.approx(0.4)
+    assert t.step(0.9, 0.9) == 0.0
+    assert t.step(1.2, 0.9) == 0.0      # never negative (Eq. 7)
+    assert t.cumulative == pytest.approx(0.4)
+    assert t.cumulative_curve().tolist() == pytest.approx([0.4, 0.4, 0.4])
+
+
+def test_router_state_roundtrip():
+    r = _router()
+    for uid in range(10):
+        q = Query(uid=uid, text=f"Summarize the following.\nArticle {uid}")
+        d = r.route(q)
+        r.feedback(Feedback(query_uid=uid, model_index=d.model_index,
+                            accuracy=0.5, energy_wh=0.1, latency_ms=5.0))
+    blob = r.state_dict()
+    r2 = _router()
+    r2.load_state_dict(blob)
+    np.testing.assert_allclose(r2.selection_counts(), r.selection_counts())
