@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import RouterConfig
+from repro.kernels.linucb.ops import linucb_scores as linucb_scores_kernel
 
 NEG_INF = -1e30
 
@@ -110,6 +111,17 @@ def linucb_scores(state: BanditState, x: jax.Array, alpha: float,
     mean = theta @ x                                             # (M,)
     var = jnp.maximum(ainv_x @ x, 0.0)
     return mean + alpha * jnp.sqrt(var)
+
+
+def linucb_scores_batch(state: BanditState, X: jax.Array,
+                        alpha: float) -> jax.Array:
+    """Eq. 13 over a query batch: (Q, d) contexts → (Q, M) UCB scores.
+
+    Runs the fused Pallas kernel (kernels/linucb) over the maintained
+    Sherman–Morrison inverses — one VMEM pass per (Q-block, M-block) tile
+    instead of Q separate decision solves.
+    """
+    return linucb_scores_kernel(state.A_inv, state.theta, X, alpha)
 
 
 def thompson_scores(state: BanditState, x: jax.Array, sigma: float,
@@ -230,6 +242,45 @@ class BanditPolicy:
             feas = jnp.pad(feas, (0, self.config.max_arms - feas.shape[0]))
         arm, scores, self.state = self._select(self.state, jnp.asarray(x), feas)
         return int(arm), np.asarray(scores)
+
+    def select_batch(self, X: np.ndarray,
+                     feasible: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized arm selection: X (Q, d), feasible (Q, n) bool →
+        (arms (Q,), masked scores (Q, max_arms)).
+
+        LinUCB with maintained inverses is deterministic, so the whole
+        batch is scored by one fused kernel call and an argmax per row —
+        arm choices are identical to Q sequential ``select`` calls on the
+        same state.  Stochastic policies (CTS, ε-greedy) and the
+        per-decision Cholesky mode keep sequential per-query semantics
+        (each query must consume its own PRNG draw / solve).
+        """
+        X = np.asarray(X, dtype=np.float32)
+        feas = np.asarray(feasible, dtype=bool)
+        q, m = X.shape[0], self.config.max_arms
+        if q == 0:
+            return (np.zeros(0, dtype=np.int64),
+                    np.zeros((0, m), dtype=np.float32))
+        if feas.shape[1] < m:
+            feas = np.pad(feas, ((0, 0), (0, m - feas.shape[1])))
+        if (self.config.algorithm == "linucb"
+                and self.config.solve_mode == "sherman_morrison"):
+            scores = linucb_scores_batch(self.state, jnp.asarray(X),
+                                         self.config.alpha_ucb)
+            mask = np.asarray(self.state.active)[None, :] & feas
+            masked = np.where(mask, np.asarray(scores), NEG_INF)
+            arms = np.argmax(masked, axis=1)
+            # advance the key so batched selection is not a state no-op
+            # (LinUCB itself never consumes it; the stream does NOT match
+            # what Q sequential select() calls would produce)
+            key, _ = jax.random.split(self.state.key)
+            self.state = self.state._replace(key=key)
+            return arms.astype(np.int64), masked.astype(np.float32)
+        arms = np.zeros(q, dtype=np.int64)
+        masked = np.zeros((q, m), dtype=np.float32)
+        for i in range(q):
+            arms[i], masked[i] = self.select(X[i], feas[i])
+        return arms, masked
 
     def update(self, arm: int, x: np.ndarray, reward: float) -> None:
         self.state = self._update(self.state, jnp.int32(arm), jnp.asarray(x),

@@ -96,8 +96,14 @@ class TaskClassifier:
         return float(np.mean(pred == np.asarray(y)))
 
     def predict(self, text: str) -> int:
-        e = jnp.asarray(self.embedder.encode(self.instruction_text(text)))[None]
-        return int(np.argmax(np.asarray(_lr_predict_logits(self.w, self.b, e))))
+        return int(self.predict_batch([text])[0])
+
+    def predict_batch(self, texts: Sequence[str]) -> np.ndarray:
+        """Classify a batch in one embed + one matmul; (len(texts),) labels."""
+        e = jnp.asarray(self.embedder.encode_batch(
+            [self.instruction_text(t) for t in texts]))
+        return np.argmax(np.asarray(_lr_predict_logits(self.w, self.b, e)),
+                         axis=1)
 
     def state_dict(self) -> dict:
         return {"w": np.asarray(self.w), "b": np.asarray(self.b)}
@@ -256,28 +262,46 @@ class ContextGenerator:
         return x
 
     def __call__(self, text: str) -> ContextVector:
+        # the batch-of-one: keeps the sequential and batched featurization
+        # paths structurally identical (route_batch's equivalence guarantee)
+        return self.batch([text])[0]
+
+    def batch(self, texts: Sequence[str]) -> list:
+        """Featurize a query batch: List[ContextVector], index-aligned.
+
+        Embedding + task classification are vectorized; the k-means
+        centroid updates (Eq. 10) stay sequential in arrival order because
+        each update shifts the centroid the next assignment sees — this is
+        exactly what Q successive ``__call__``s would compute, so batched
+        and sequential featurization agree bitwise.
+        """
+        if not texts:
+            return []
+        n = len(texts)
         t0 = time.perf_counter()
-        task_label = self.task_classifier.predict(text) if self.use_task else 0
+        if self.use_task:
+            task_labels = self.task_classifier.predict_batch(texts)
+        else:
+            task_labels = np.zeros(n, dtype=np.int64)
         t1 = time.perf_counter()
         if self.use_cluster:
-            e_full = self.embedder.encode(text)
-            cluster = self.kmeans.update(e_full)
+            embs = self.embedder.encode_batch(texts)
+            clusters = [self.kmeans.update(e) for e in embs]
         else:
-            cluster = 0
+            clusters = [0] * n
         t2 = time.perf_counter()
-        if self.use_complexity:
-            comp_score, comp_bin = self.complexity(text)
-        else:
-            comp_score, comp_bin = 100.0, 0
+        comp = ([self.complexity(t) for t in texts] if self.use_complexity
+                else [(100.0, 0)] * n)
         t3 = time.perf_counter()
         self.timings_ms["task"] += (t1 - t0) * 1e3
         self.timings_ms["cluster"] += (t2 - t1) * 1e3
         self.timings_ms["complexity"] += (t3 - t2) * 1e3
-        self.timings_ms["n"] += 1
-        return ContextVector(
-            task_label=task_label, cluster=cluster, complexity_bin=comp_bin,
-            complexity_score=comp_score,
-            vector=self.encode(task_label, cluster, comp_bin))
+        self.timings_ms["n"] += n
+        return [ContextVector(
+            task_label=int(task_labels[i]), cluster=clusters[i],
+            complexity_bin=comp[i][1], complexity_score=comp[i][0],
+            vector=self.encode(int(task_labels[i]), clusters[i], comp[i][1]))
+            for i in range(n)]
 
     def mean_overhead_ms(self) -> dict:
         n = max(self.timings_ms["n"], 1)

@@ -18,7 +18,7 @@ serving runtime batch/queue independently.
 from __future__ import annotations
 
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -58,20 +58,49 @@ class GreenServRouter:
     # -- Algorithm 1 ---------------------------------------------------------
 
     def route(self, query: Query) -> RouteDecision:
-        x_t = self.context(query.text)
+        # the batch-of-one: keeps the sequential and batched decision paths
+        # structurally identical (see route_batch's equivalence guarantee)
+        return self.route_batch([query])[0]
+
+    def route_batch(self, queries: Sequence[Query]) -> List[RouteDecision]:
+        """Route an admitted batch in one shot (the serving hot path).
+
+        Featurization is vectorized (one embed + one classifier matmul for
+        the whole batch) and LinUCB scoring runs as a single fused (Q, M)
+        kernel call, so per-query decision overhead amortizes to the
+        batched cost.  Arm choices are identical to calling ``route`` on
+        each query in order (k-means updates are applied in arrival order,
+        and LinUCB selection is deterministic given the bandit state).
+        """
+        if not queries:
+            return []
+        ctxs = self.context.batch([q.text for q in queries])
         t0 = time.perf_counter()
-        feasible = self.pool.feasible_mask(query)
-        arm, scores = self.policy.select(x_t.vector, feasible)
-        decision_ms = (time.perf_counter() - t0) * 1e3
-        self.decision_ms_total += decision_ms
-        self.n_routed += 1
-        decision = RouteDecision(
-            query_uid=query.uid, model_index=arm,
-            model_name=self.pool[arm].name, context=x_t,
-            ucb_scores=scores, feasible_mask=feasible,
-            overhead_ms=decision_ms)
-        self._pending[query.uid] = decision
-        return decision
+        masks = [self.pool.feasible_mask(q) for q in queries]
+        # a concurrent pool.add() mid-batch yields ragged rows; pad earlier
+        # rows with False (those queries were routed before the new model
+        # existed, matching sequential semantics)
+        width = max(m.shape[0] for m in masks)
+        feasible = np.zeros((len(masks), width), dtype=bool)
+        for i, m in enumerate(masks):
+            feasible[i, : m.shape[0]] = m
+        x = np.stack([c.vector for c in ctxs])
+        arms, scores = self.policy.select_batch(x, feasible)
+        batch_ms = (time.perf_counter() - t0) * 1e3
+        per_query_ms = batch_ms / len(queries)
+        self.decision_ms_total += batch_ms
+        self.n_routed += len(queries)
+        decisions: List[RouteDecision] = []
+        for q, ctx, arm, score_row, feas_row in zip(queries, ctxs, arms,
+                                                    scores, feasible):
+            decision = RouteDecision(
+                query_uid=q.uid, model_index=int(arm),
+                model_name=self.pool[int(arm)].name, context=ctx,
+                ucb_scores=score_row, feasible_mask=feas_row,
+                overhead_ms=per_query_ms)
+            self._pending[q.uid] = decision
+            decisions.append(decision)
+        return decisions
 
     def feedback(self, fb: Feedback,
                  oracle_reward: Optional[float] = None) -> float:
@@ -91,6 +120,31 @@ class GreenServRouter:
         if oracle_reward is not None:
             self.regret.step(r_t, oracle_reward)
         return r_t
+
+    def feedback_batch(self, fbs: Sequence[Feedback],
+                       oracle_rewards: Optional[Sequence[float]] = None,
+                       strict: bool = True) -> List[Optional[float]]:
+        """Close the loop for a batch of completions, in the given order.
+
+        Bandit updates to *different* arms commute exactly (each arm owns
+        its own sufficient statistics), so completion order across arms
+        does not change the posterior; same-arm updates are applied in
+        sequence.  With ``strict=False`` a feedback whose query was never
+        routed here, or whose model does not match the routed arm (a hedge
+        duplicate that won on a non-routed engine), is skipped and its slot
+        in the returned reward list is None.
+        """
+        rewards: List[Optional[float]] = []
+        for i, fb in enumerate(fbs):
+            oracle = (oracle_rewards[i] if oracle_rewards is not None
+                      else None)
+            try:
+                rewards.append(self.feedback(fb, oracle))
+            except (KeyError, ValueError):
+                if strict:
+                    raise
+                rewards.append(None)
+        return rewards
 
     def oracle_reward(self, acc_by_model: np.ndarray,
                       energy_by_model: np.ndarray,

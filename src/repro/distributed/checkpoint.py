@@ -29,18 +29,15 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import compat
+
 MANIFEST = "manifest.json"
 LATEST = "LATEST"
 
 
 def _flatten(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
-    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    named = []
-    for path, leaf in leaves:
-        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                        for p in path)
-        named.append((name, leaf))
-    return named, treedef
+    leaves, treedef = compat.tree_flatten_with_path(tree)
+    return [(compat.path_str(path), leaf) for path, leaf in leaves], treedef
 
 
 def save(directory: str, step: int, tree: Any,

@@ -19,7 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro import compat
 
 
 def _linucb_kernel(ainv_ref, theta_ref, x_ref, o_ref, *, alpha: float):
@@ -52,7 +52,7 @@ def linucb_scores_fwd(a_inv, theta, x, alpha: float, bm: int, bq: int,
         ],
         out_specs=pl.BlockSpec((bq, bm), lambda qi, mi: (qi, mi)),
         out_shape=jax.ShapeDtypeStruct((q, m), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(a_inv, theta, x)

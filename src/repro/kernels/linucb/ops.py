@@ -1,6 +1,7 @@
 """jit'd public wrapper for the LinUCB scoring kernel."""
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -16,6 +17,17 @@ def _pick_block(n: int, target: int) -> int:
     return b
 
 
+# static alpha/block/interpret: one compiled program per (M, d, Q, blocks)
+# combination — serving batch sizes recur, so steady state is cache hits,
+# not per-call retracing of the pallas_call
+@functools.partial(jax.jit, static_argnames=("alpha", "bm", "bq",
+                                             "interpret"))
+def _scores_jit(a_inv, theta, xq, alpha: float, bm: int, bq: int,
+                interpret: bool):
+    return linucb_scores_fwd(a_inv, theta, xq, alpha, bm=bm, bq=bq,
+                             interpret=interpret)
+
+
 def linucb_scores(a_inv: jax.Array, theta: jax.Array, x: jax.Array,
                   alpha: float, block_m: int = 16, block_q: int = 128,
                   interpret: Optional[bool] = None) -> jax.Array:
@@ -24,10 +36,18 @@ def linucb_scores(a_inv: jax.Array, theta: jax.Array, x: jax.Array,
         interpret = jax.default_backend() != "tpu"
     single = x.ndim == 1
     xq = x[None] if single else x
+    # pad Q to the next power of two: serving batches take arbitrary sizes,
+    # and compiling one program per distinct Q would thrash the jit cache —
+    # padding bounds the compiled variants to log2(block cap) shapes
+    q = xq.shape[0]
+    q_pad = 1 << max(q - 1, 0).bit_length()
+    if q_pad != q:
+        xq = jnp.concatenate(
+            [xq, jnp.zeros((q_pad - q, xq.shape[1]), xq.dtype)])
     bm = _pick_block(a_inv.shape[0], block_m)
-    bq = _pick_block(xq.shape[0], block_q)
-    out = linucb_scores_fwd(a_inv.astype(jnp.float32),
-                            theta.astype(jnp.float32),
-                            xq.astype(jnp.float32), float(alpha),
-                            bm=bm, bq=bq, interpret=interpret)
+    bq = _pick_block(q_pad, block_q)
+    out = _scores_jit(a_inv.astype(jnp.float32),
+                      theta.astype(jnp.float32),
+                      xq.astype(jnp.float32), float(alpha),
+                      bm=bm, bq=bq, interpret=bool(interpret))[:q]
     return out[0] if single else out

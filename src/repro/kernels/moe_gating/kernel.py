@@ -15,7 +15,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro import compat
 
 NEG_INF = -1e30
 
@@ -52,7 +52,7 @@ def topk_gating_fwd(logits: jax.Array, k: int, bt: int,
                    pl.BlockSpec((bt, k), lambda i: (i, 0))],
         out_shape=[jax.ShapeDtypeStruct((t, k), jnp.float32),
                    jax.ShapeDtypeStruct((t, k), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(logits)

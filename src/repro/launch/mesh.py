@@ -3,35 +3,37 @@
 Defined as FUNCTIONS so importing this module never touches jax device
 state — smoke tests and benches must keep seeing 1 CPU device; only
 ``dryrun.py`` (which sets XLA_FLAGS before any jax import) sees 512.
+
+All meshes are built through ``repro.compat.make_mesh``, which requests
+Auto axis types on JAX versions that have the AxisType enum and omits the
+argument on 0.4.x (where auto is the only behaviour).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
 
-
-def _auto(n: int):
-    return (AxisType.Auto,) * n
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16×16 = 256 chips/pod; the multi-pod mesh adds a leading 2-pod axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     """Arbitrary mesh with Auto axis types (tests, degraded/elastic meshes)."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh() -> Mesh:
     """The 1-device mesh every smoke test / bench runs under."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+    return compat.make_mesh((n, 1), ("data", "model"))
 
 
 def degraded_mesh(lost_chips: int, *, multi_pod: bool = False) -> Mesh:
@@ -45,6 +47,5 @@ def degraded_mesh(lost_chips: int, *, multi_pod: bool = False) -> Mesh:
     if data < 1:
         raise ValueError(f"cannot remesh: {total} chips < model axis {model}")
     if multi_pod:
-        return jax.make_mesh((1, data, model), ("pod", "data", "model"),
-                             axis_types=_auto(3))
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+        return compat.make_mesh((1, data, model), ("pod", "data", "model"))
+    return compat.make_mesh((data, model), ("data", "model"))

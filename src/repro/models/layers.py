@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+
 Params = Dict[str, Any]
 
 
@@ -47,12 +49,11 @@ def _init_leaf(key, path: str, s: jax.ShapeDtypeStruct) -> jax.Array:
 
 def materialize(key: jax.Array, shape_tree: Params) -> Params:
     """Initialize a params pytree from its ShapeDtypeStruct tree."""
-    leaves, treedef = jax.tree.flatten_with_path(shape_tree)
+    leaves, treedef = compat.tree_flatten_with_path(shape_tree)
     keys = jax.random.split(key, len(leaves))
     out = []
     for k, (path, s) in zip(keys, leaves):
-        pname = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        out.append(_init_leaf(k, pname, s))
+        out.append(_init_leaf(k, compat.path_str(path), s))
     return jax.tree.unflatten(jax.tree.structure(shape_tree), out)
 
 

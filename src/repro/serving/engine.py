@@ -46,6 +46,11 @@ class BaseEngine:
     def submit(self, req: Request) -> None:
         raise NotImplementedError
 
+    def submit_many(self, reqs: List[Request]) -> None:
+        """Enqueue an already-routed batch slice in arrival order."""
+        for req in reqs:
+            self.submit(req)
+
     def step(self) -> List[Response]:
         raise NotImplementedError
 

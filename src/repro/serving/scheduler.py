@@ -20,7 +20,7 @@ concerns of DESIGN §5:
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -54,6 +54,9 @@ class PoolServer:
         self.responses: Dict[int, Response] = {}
         self.wait_steps: Dict[int, int] = {}
         self.stats = {"hedges": 0, "restarts": 0, "completed": 0}
+        # feedback for completions collected during the current step(); the
+        # router is updated once per step via feedback_batch
+        self._fb_buffer: List[Feedback] = []
 
     # -- pool growth (paper §6.3.4) ---------------------------------------------
 
@@ -65,14 +68,35 @@ class PoolServer:
     # -- submission ---------------------------------------------------------------
 
     def submit(self, query: Query) -> Request:
-        decision = self.router.route(query)
-        req = Request(query=query,
-                      prompt_tokens=self.tokenizer(query.text),
-                      max_new_tokens=query.max_new_tokens)
-        self.engines[decision.model_name].submit(req)
-        self.inflight[query.uid] = req
-        self.wait_steps[query.uid] = 0
-        return req
+        return self.submit_batch([query])[0]
+
+    def submit_batch(self, queries: Sequence[Query]) -> List[Request]:
+        """Admit a batch: one ``route_batch`` call routes every query, then
+        each engine receives its slice in arrival order.  This is the
+        serving hot path — featurization and LinUCB scoring amortize over
+        the batch instead of paying per-query dispatch."""
+        # routed models always come from the pool, so checking the
+        # pool/engine invariant up front fails before ANY bookkeeping
+        # (router pending entries included) — a half-registered batch
+        # would sit in inflight forever with nothing dispatched
+        missing = [n for n in self.router.pool.names
+                   if n not in self.engines]
+        if missing:
+            raise KeyError(f"no engine for pool member(s): {missing}")
+        decisions = self.router.route_batch(queries)
+        reqs: List[Request] = []
+        per_engine: Dict[str, List[Request]] = {}
+        for query, decision in zip(queries, decisions):
+            req = Request(query=query,
+                          prompt_tokens=self.tokenizer(query.text),
+                          max_new_tokens=query.max_new_tokens)
+            per_engine.setdefault(decision.model_name, []).append(req)
+            self.inflight[query.uid] = req
+            self.wait_steps[query.uid] = 0
+            reqs.append(req)
+        for name, batch in per_engine.items():
+            self.engines[name].submit_many(batch)
+        return reqs
 
     # -- hedged (straggler-mitigating) dispatch ------------------------------------
 
@@ -111,14 +135,36 @@ class PoolServer:
         eng = self.engines[name]
         inflight = eng.restart()
         self.stats["restarts"] += 1
+        # flush buffered feedback first so re-routing sees the updated
+        # bandit, and so no pending decision consumed by the flush is
+        # overwritten by the re-route below
+        self._flush_feedback()
+        # displaced hedges are dropped, not resubmitted — clear their
+        # bookkeeping so _maybe_hedge can protect the primary again
         for req in inflight:
-            # re-route: the bandit may now prefer a different (healthy) arm
-            if req.hedge_of is not None:
-                continue
-            decision = self.router.route(req.query)
-            # drop the stale pending decision bookkeeping for the old route
+            if (req.hedge_of is not None
+                    and self.hedges.get(req.hedge_of) is req):
+                req.state = RequestState.CANCELLED
+                del self.hedges[req.hedge_of]
+        # re-route the displaced batch in one shot: the bandit may now
+        # prefer a different (healthy) arm.  restart() resets every held
+        # request to QUEUED — including a hedge loser whose query was
+        # already answered; resurrecting it would re-insert a finished uid
+        # into inflight (never drains) and duplicate the work.
+        primaries = [req for req in inflight
+                     if req.hedge_of is None
+                     and req.uid not in self.responses]
+        if not primaries:
+            return
+        decisions = self.router.route_batch([req.query for req in primaries])
+        for req, decision in zip(primaries, decisions):
             self.inflight[req.uid] = req
             self.engines[decision.model_name].submit(req)
+
+    def _flush_feedback(self) -> None:
+        if self._fb_buffer:
+            fbs, self._fb_buffer = self._fb_buffer, []
+            self.router.feedback_batch(fbs, strict=False)
 
     # -- completion -------------------------------------------------------------------
 
@@ -136,16 +182,20 @@ class PoolServer:
         if accuracy is None:
             accuracy = (self.accuracy_fn(primary.query, resp)
                         if self.accuracy_fn else 0.0)
+        # buffered: the router is updated once per step via feedback_batch
+        # (a hedge that finished on a non-routed arm is skipped at flush; a
+        # hedge that won on an engine outside the pool has no arm at all)
         try:
-            self.router.feedback(Feedback(
-                query_uid=primary_uid, model_index=self.router.pool.index_of(
-                    resp.model_name),
+            model_index = self.router.pool.index_of(resp.model_name)
+        except KeyError:
+            model_index = None
+        if model_index is not None:
+            self._fb_buffer.append(Feedback(
+                query_uid=primary_uid, model_index=model_index,
                 accuracy=float(accuracy), energy_wh=resp.energy_wh,
                 latency_ms=resp.latency_ms,
                 input_tokens=resp.input_tokens,
                 output_tokens=resp.output_tokens))
-        except (KeyError, ValueError):
-            pass   # hedge finished on a non-routed arm: no bandit update
         self.responses[primary_uid] = resp
         self.inflight.pop(primary_uid, None)
         self.hedges.pop(primary_uid, None)
@@ -167,6 +217,7 @@ class PoolServer:
                         done.append(resp)
             except EngineFailure:
                 self._restart_engine(name)
+        self._flush_feedback()
         for uid, req in self.inflight.items():
             if req.state == RequestState.QUEUED:
                 self.wait_steps[uid] = self.wait_steps.get(uid, 0) + 1

@@ -1,0 +1,181 @@
+"""Batched closed-loop routing: route_batch/feedback_batch vs the
+sequential Algorithm-1 path, and the serving engine's batch admission."""
+import numpy as np
+import pytest
+
+from repro.core.bandits import NEG_INF
+from repro.core.pool import ModelPool
+from repro.core.router import GreenServRouter
+from repro.core.types import (Feedback, ModelProfile, Query, RouterConfig,
+                              TaskType)
+from repro.data.stream import make_stream
+from repro.serving import PoolServer, SimEngine
+
+
+def _pool(n=4):
+    return ModelPool([ModelProfile(name=f"m{i}", family="t",
+                                   params_b=float(i + 1),
+                                   ms_per_token=float(i + 1),
+                                   prefill_ms=10.0)
+                      for i in range(n)])
+
+
+def _router(n=4, **kw):
+    cfg = RouterConfig(max_arms=16, **kw)
+    return GreenServRouter(cfg, _pool(n))
+
+
+def _warm(router, n=8, uid0=10_000):
+    """Identical feedback history → identical bandit state across routers."""
+    for i in range(n):
+        q = Query(uid=uid0 + i, text=f"Summarize the following.\nDoc {i} on "
+                                     f"topic {i % 3} with extra detail words")
+        d = router.route(q)
+        router.feedback(Feedback(
+            query_uid=q.uid, model_index=d.model_index,
+            accuracy=0.3 + 0.2 * (d.model_index % 3),
+            energy_wh=0.01 * (d.model_index + 1), latency_ms=5.0))
+
+
+def _queries(n=12):
+    texts = [
+        "Answer the question.\nWhat is the boiling point of water?",
+        "Complete the story.\nThe hiker reached the summit and",
+        "Solve step by step.\n17 apples shared among 4 children leaves",
+        "Summarize the following.\nThe committee deliberated for hours",
+        "Choose the best option.\nWhich gas dominates Earth's atmosphere?",
+        "Translate to plain words.\nPhotosynthesis converts light energy",
+    ]
+    return [Query(uid=i, text=texts[i % len(texts)] + f" variant {i}",
+                  max_new_tokens=32 + 8 * (i % 3))
+            for i in range(n)]
+
+
+def test_route_batch_empty():
+    assert _router().route_batch([]) == []
+
+
+def test_select_batch_empty():
+    r = _router()
+    arms, scores = r.policy.select_batch(
+        np.zeros((0, r.config.context_dim), np.float32),
+        np.zeros((0, len(r.pool)), bool))
+    assert arms.shape == (0,)
+    assert scores.shape == (0, r.config.max_arms)
+
+
+def test_route_batch_matches_sequential_arms():
+    """Acceptance: identical arm choices for the same bandit state."""
+    r_seq, r_bat = _router(), _router()
+    _warm(r_seq), _warm(r_bat)
+    qs = _queries(12)
+    seq = [r_seq.route(q) for q in qs]
+    bat = r_bat.route_batch(qs)
+    assert [d.model_index for d in seq] == [d.model_index for d in bat]
+    assert [d.model_name for d in seq] == [d.model_name for d in bat]
+    for s, b in zip(seq, bat):
+        # featurization agrees exactly: same task/cluster/bin → same vector
+        assert s.context.task_label == b.context.task_label
+        assert s.context.cluster == b.context.cluster
+        assert s.context.complexity_bin == b.context.complexity_bin
+        np.testing.assert_array_equal(s.context.vector, b.context.vector)
+        np.testing.assert_array_equal(s.feasible_mask, b.feasible_mask)
+
+
+def test_route_batch_respects_feasibility():
+    r = _router()
+    # budget only m0 can meet: m0 = 10 + 1·t
+    qs = [Query(uid=i, text=f"short question {i}", max_new_tokens=50,
+                latency_budget_ms=70.0) for i in range(4)]
+    for d in r.route_batch(qs):
+        assert d.model_name == "m0"
+        assert d.ucb_scores[1] == pytest.approx(NEG_INF)
+
+
+def test_route_batch_registers_pending_feedback():
+    r = _router()
+    qs = _queries(6)
+    decisions = r.route_batch(qs)
+    rewards = r.feedback_batch([
+        Feedback(query_uid=q.uid, model_index=d.model_index, accuracy=0.8,
+                 energy_wh=0.02, latency_ms=4.0)
+        for q, d in zip(qs, decisions)])
+    assert all(rw is not None for rw in rewards)
+    assert int(r.policy.state.t) == len(qs)
+    with pytest.raises(KeyError):     # loop already closed
+        r.feedback(Feedback(query_uid=qs[0].uid, model_index=0,
+                            accuracy=1.0, energy_wh=0.0, latency_ms=0.0))
+
+
+def test_feedback_batch_order_independence_across_arms():
+    """Completion order across different arms must not change the posterior
+    (each arm owns its sufficient statistics)."""
+    r_fwd, r_rev = _router(), _router()
+    _warm(r_fwd), _warm(r_rev)
+    qs = _queries(10)
+    d_fwd = r_fwd.route_batch(qs)
+    d_rev = r_rev.route_batch(qs)
+    assert [d.model_index for d in d_fwd] == [d.model_index for d in d_rev]
+    fbs = [Feedback(query_uid=q.uid, model_index=d.model_index,
+                    accuracy=0.4 + 0.05 * (i % 4), energy_wh=0.01 * (i % 3),
+                    latency_ms=3.0)
+           for i, (q, d) in enumerate(zip(qs, d_fwd))]
+    r_fwd.feedback_batch(fbs)
+    r_rev.feedback_batch(list(reversed(fbs)))
+    s1, s2 = r_fwd.state_dict()["bandit"], r_rev.state_dict()["bandit"]
+    np.testing.assert_array_equal(s1["counts"], s2["counts"])
+    # same-arm updates reorder float ops (Sherman–Morrison), hence allclose
+    np.testing.assert_allclose(s1["b"], s2["b"], atol=1e-5)
+    np.testing.assert_allclose(s1["theta"], s2["theta"], atol=1e-4)
+    np.testing.assert_allclose(s1["A"], s2["A"], atol=1e-5)
+
+
+def test_feedback_batch_strict_modes():
+    r = _router()
+    ghost = [Feedback(query_uid=424242, model_index=0, accuracy=1.0,
+                      energy_wh=0.0, latency_ms=0.0)]
+    with pytest.raises(KeyError):
+        r.feedback_batch(ghost)
+    assert r.feedback_batch(ghost, strict=False) == [None]
+
+
+def _sim_server(n_models=4):
+    profiles = [ModelProfile(name=f"sim{i}", family="s", params_b=i + 1.0)
+                for i in range(n_models)]
+    pool = ModelPool(profiles)
+
+    def outcome(query, model):
+        return 0.5, 0.01, 10.0, 4
+    engines = {p.name: SimEngine(p, outcome) for p in profiles}
+    router = GreenServRouter(RouterConfig(max_arms=16), pool)
+    return PoolServer(router, engines), engines
+
+
+def test_engine_batch_closed_loop():
+    """Mixed-task batch admitted in one shot, routed, executed, fed back."""
+    server, engines = _sim_server()
+    qs = make_stream(per_task=3)          # all five task families
+    assert len({q.task for q in qs}) == len(TaskType)
+    reqs = server.submit_batch(qs)
+    assert len(reqs) == len(qs)
+    assert len(server.inflight) == len(qs)
+    # every request landed on the engine its decision named
+    assert sum(e.pending for e in engines.values()) == len(qs)
+    server.run_until_drained()
+    assert len(server.responses) == len(qs)
+    assert not server.inflight
+    assert int(server.router.policy.state.t) == len(qs)   # loop closed
+    assert server.stats["completed"] == len(qs)
+
+
+def test_engine_batch_matches_sequential_submission():
+    """submit_batch routes exactly like per-query submit on a twin server."""
+    srv_a, _ = _sim_server()
+    srv_b, _ = _sim_server()
+    qs = make_stream(per_task=2)
+    for q in qs:
+        srv_a.submit(q)
+    srv_b.submit_batch(qs)
+    names_a = [srv_a.inflight[q.uid].model_name for q in qs]
+    names_b = [srv_b.inflight[q.uid].model_name for q in qs]
+    assert names_a == names_b

@@ -126,7 +126,9 @@ def test_mamba2_ssd(b, s, h, p, n, chunk):
 
 
 @pytest.mark.parametrize("m,d,q,alpha", [(16, 12, 1, 0.1), (8, 64, 32, 0.5),
-                                         (64, 128, 128, 0.1)])
+                                         (64, 128, 128, 0.1),
+                                         # non-power-of-two Q: pad + slice
+                                         (16, 12, 7, 0.1), (8, 64, 50, 0.5)])
 def test_linucb_kernel(m, d, q, alpha):
     ks = jax.random.split(jax.random.PRNGKey(m + d), 3)
     L = jax.random.normal(ks[0], (m, d, d)) * 0.2

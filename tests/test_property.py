@@ -1,5 +1,9 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="dev-only dependency (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bandits import BanditPolicy

@@ -10,7 +10,8 @@ from repro.configs import get_config
 from repro.data import tokenizer as tok
 from repro.data.profiles import OutcomeSimulator
 from repro.data.stream import make_stream
-from repro.serving import ModelEngine, PoolServer, Request, SimEngine
+from repro.serving import (ModelEngine, PoolServer, Request, RequestState,
+                           SimEngine)
 
 
 def _real_engine(name="rwkv6-1.6b", max_batch=3, max_len=96, seed=0):
@@ -90,6 +91,42 @@ def test_engine_failure_restart_requeues():
     server.run_until_drained()
     assert server.stats["restarts"] >= 1
     assert len(server.responses) == 9
+
+
+def test_restart_does_not_resurrect_answered_query():
+    """A hedge loser sitting in a failed engine must not be re-routed:
+    its query is already answered, and resurrecting it re-inserts a
+    finished uid into inflight (run_until_drained would never drain)."""
+    profiles = [ModelProfile(name=f"sim{i}", family="s", params_b=i + 1.0)
+                for i in range(2)]
+    pool = ModelPool(profiles)
+
+    def outcome(query, model):
+        return 0.5, 0.01, 10.0, 4
+    # a fresh bandit routes to arm 0 (all scores tie) — make that engine
+    # slow so the hedge onto the fast engine wins while the primary is
+    # still queued
+    engines = {"sim0": SimEngine(profiles[0], outcome, steps_per_query=50),
+               "sim1": SimEngine(profiles[1], outcome, steps_per_query=1)}
+    router = GreenServRouter(RouterConfig(max_arms=16), pool)
+    server = PoolServer(router, engines, hedge_after_steps=1)
+    q = make_stream(per_task=1)[0]
+    req = server.submit(q)
+    assert req.model_name == "sim0"
+    for _ in range(10):
+        server.step()
+        if q.uid in server.responses:
+            break
+    assert q.uid in server.responses          # hedge won on sim1
+    assert req.state == RequestState.CANCELLED
+    # the cancelled primary still sits in sim0's queue; fail sim0 so
+    # restart() resets it to QUEUED and hands it back for re-routing
+    engines["sim0"].inject_failure()
+    server.step()
+    assert server.stats["restarts"] == 1
+    server.run_until_drained(max_steps=200)   # must not TimeoutError
+    assert len(server.responses) == 1
+    assert not server.inflight
 
 
 def test_runtime_model_addition_grows_router():
