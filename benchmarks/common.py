@@ -108,3 +108,76 @@ def run_policy(router: Optional[GreenServRouter], queries: Sequence[Query],
 
 def stream(per_task: int = 500, seed: int = 0):
     return make_stream(per_task=per_task, seed=seed)
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Outcome of one paced PoolServer drive over a stream."""
+
+    mean_accuracy: float
+    total_energy_wh: float
+    step_s_total: float
+    n_steps: int
+    server: object                      # the drained PoolServer
+    telemetry: object                   # the attached Telemetry (or None)
+
+    @property
+    def step_ms(self) -> float:
+        return self.step_s_total / max(self.n_steps, 1) * 1e3
+
+
+def drive_pool_stream(queries: Sequence[Query], telemetry=None,
+                      lam: float = 0.4, seed: int = 0, batch: int = 25,
+                      concurrency: int = 4,
+                      max_inflight: Optional[int] = None,
+                      exclude: Optional[List[str]] = None,
+                      max_arms: int = 32,
+                      fit_classifier: bool = False) -> ServeResult:
+    """Serve a stream through a SimEngine pool behind PoolServer.
+
+    The canonical closed-loop drive shared by the telemetry benchmark and
+    tests: admission is paced — the next batch waits until in-flight work
+    drains below ``max_inflight`` (default 2·batch), since open-loop
+    blasting into a backed-up pool would let hundreds of stale-λ routing
+    decisions queue between a governor adjustment and its first
+    observable effect.
+    """
+    import time as _time
+
+    from repro.data import OutcomeSimulator as _Sim
+    from repro.serving import PoolServer, SimEngine
+
+    max_inflight = max_inflight if max_inflight is not None else 2 * batch
+    pool = build_paper_pool(exclude=exclude)
+    router = GreenServRouter(
+        RouterConfig(lam=lam, energy_scale_wh=ENERGY_SCALE_WH,
+                     max_arms=max_arms, seed=seed), pool)
+    if fit_classifier:
+        texts, labels = labeled_sample(n_per_task=40, seed=seed + 1)
+        router.context.task_classifier.fit(texts, labels, steps=150)
+    sim = _Sim(seed=seed)
+    engines = {pool[i].name: SimEngine(pool[i], sim, concurrency=concurrency)
+               for i in range(len(pool))}
+    server = PoolServer(router, engines, telemetry=telemetry)
+    step_s = 0.0
+    n_steps = 0
+
+    def timed_step():
+        nonlocal step_s, n_steps
+        t0 = _time.perf_counter()
+        server.step()
+        step_s += _time.perf_counter() - t0
+        n_steps += 1
+
+    for i in range(0, len(queries), batch):
+        while len(server.inflight) > max_inflight and n_steps < 100_000:
+            timed_step()
+        server.submit_batch(queries[i:i + batch])
+        timed_step()
+    while server.inflight and n_steps < 100_000:
+        timed_step()
+    accs = [getattr(r, "accuracy", 0.0) for r in server.responses.values()]
+    wh = sum(r.energy_wh for r in server.responses.values())
+    return ServeResult(mean_accuracy=float(np.mean(accs)),
+                       total_energy_wh=wh, step_s_total=step_s,
+                       n_steps=n_steps, server=server, telemetry=telemetry)

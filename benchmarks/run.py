@@ -23,7 +23,8 @@ def main() -> None:
 
     from benchmarks import (bench_baselines, bench_features, bench_kernels,
                             bench_lambda_sweep, bench_model_addition,
-                            bench_overhead, bench_routerbench, roofline)
+                            bench_overhead, bench_routerbench,
+                            bench_telemetry, roofline)
 
     def section(title, fn):
         t0 = time.time()
@@ -49,6 +50,8 @@ def main() -> None:
             lambda: bench_routerbench.main(n_per_task=max(per_task // 2, 50)))
     section("Table3+4: overhead",
             lambda: bench_overhead.main(n_queries=per_task))
+    section("Telemetry: overhead + energy-budget governance",
+            lambda: bench_telemetry.main(per_task=max(per_task // 2, 60)))
     section("Kernels: allclose + ref timing", bench_kernels.main)
     section("Roofline table (from dry-run records)",
             lambda: roofline.table("experiments/dryrun"))

@@ -1,0 +1,59 @@
+"""Energy-budget governance demo: the same stream served twice — once
+ungoverned at λ=0.4, once with an EnergyBudgetGovernor holding a Wh cap at
+60% of what the first run spent.  Watch λ tighten as the budget depletes
+and the router shift to cheaper pool members.
+
+    PYTHONPATH=src python examples/energy_budget.py [--per-task 300]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")         # benchmarks.common (run from the repo root)
+
+from benchmarks.common import drive_pool_stream
+from repro.data.stream import make_stream
+from repro.telemetry import (EnergyBudgetGovernor, Telemetry,
+                             diurnal_carbon_intensity)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--per-task", type=int, default=300)
+ap.add_argument("--budget-frac", type=float, default=0.6)
+ap.add_argument("--carbon", action="store_true",
+                help="scale the budget refill by a diurnal carbon signal")
+args = ap.parse_args()
+
+
+def serve(queries, telemetry):
+    res = drive_pool_stream(queries, telemetry, batch=10,
+                            fit_classifier=True)
+    return res.mean_accuracy, res.total_energy_wh, res.server.router
+
+
+queries = make_stream(per_task=args.per_task)
+print(f"serving {len(queries)} queries, ungoverned (λ=0.4) ...")
+acc_u, wh_u, _ = serve(queries, Telemetry())
+print(f"  ungoverned: acc {acc_u:.3f}, {wh_u:.2f} Wh "
+      f"({wh_u / len(queries) * 1e3:.1f} mWh/query)")
+
+budget = args.budget_frac * wh_u
+carbon = diurnal_carbon_intensity if args.carbon else None
+governor = EnergyBudgetGovernor(budget, horizon_queries=len(queries),
+                                gain=0.005, lambda_max=0.8,
+                                carbon_fn=carbon)
+telemetry = Telemetry(governor=governor)
+print(f"re-serving under a {budget:.2f} Wh cap "
+      f"({args.budget_frac:.0%} of ungoverned) ...")
+acc_g, wh_g, router = serve(queries, telemetry)
+print(f"  governed:   acc {acc_g:.3f}, {wh_g:.2f} Wh "
+      f"({wh_g / len(queries) * 1e3:.1f} mWh/query)")
+print(f"  under cap: {wh_g <= budget}   "
+      f"accuracy retained: {acc_g / max(acc_u, 1e-9):.1%}")
+
+hist = governor.lambda_history
+if hist:
+    lams = [l for _, l in hist]
+    print(f"  λ trajectory: start 0.400 → peak {max(lams):.3f} → "
+          f"final {lams[-1]:.3f}  ({len(hist)} adjustments)")
+print()
+print(telemetry.summary())

@@ -290,6 +290,24 @@ class BanditPolicy:
         self.state, idx = add_arm(self.state, self.config)
         return idx
 
+    def rescalarize(self, b: np.ndarray, reward_sum: np.ndarray) -> None:
+        """Swap in reward statistics recomputed under a new scalarization.
+
+        A_m and A_m⁻¹ depend only on the observed contexts, never on the
+        rewards, so a λ change (``GreenServRouter.set_lambda``) can rebuild
+        b_m = Σ r(λ')·x exactly from decomposed accuracy/energy sums and
+        refresh θ̂ = A⁻¹ b in one shot — the posterior mean reacts to the
+        new trade-off immediately instead of averaging it in over
+        thousands of fresh pulls.
+        """
+        b = np.asarray(b, dtype=np.float32)
+        a_inv = np.asarray(self.state.A_inv)
+        theta = np.einsum("mij,mj->mi", a_inv, b)
+        self.state = self.state._replace(
+            b=jnp.asarray(b),
+            theta=jnp.asarray(theta.astype(np.float32)),
+            reward_sum=jnp.asarray(np.asarray(reward_sum, np.float32)))
+
     def state_dict(self) -> dict:
         return {k: np.asarray(v) for k, v in self.state._asdict().items()}
 

@@ -44,6 +44,15 @@ class GreenServRouter:
         self._pending: Dict[int, RouteDecision] = {}
         self.decision_ms_total = 0.0
         self.n_routed = 0
+        # λ-decomposed sufficient statistics: b_m = (1-λ)·Σ acc·x −
+        # λ·Σ (e/scale)·x, so set_lambda can re-scalarize the bandit
+        # exactly instead of waiting for fresh pulls to wash out old λ
+        m, d = config.max_arms, config.context_dim
+        self._b_acc = np.zeros((m, d), np.float64)
+        self._b_cost = np.zeros((m, d), np.float64)
+        self._acc_sum = np.zeros(m, np.float64)
+        self._cost_sum = np.zeros(m, np.float64)
+        self._decomposed_complete = True
         # zero-calibration model addition: pool insert → fresh bandit arm
         pool.on_add(self._on_model_added)
 
@@ -54,6 +63,35 @@ class GreenServRouter:
         if arm != idx:
             raise RuntimeError(
                 f"pool/bandit index skew: pool={idx} arm={arm}")
+        self._b_acc[arm] = 0.0
+        self._b_cost[arm] = 0.0
+        self._acc_sum[arm] = 0.0
+        self._cost_sum[arm] = 0.0
+
+    # -- online λ control (telemetry.budget drives this) -----------------------
+
+    def set_lambda(self, lam: float, rescalarize: bool = True) -> None:
+        """Retune the accuracy–energy trade-off online (governor hook).
+
+        Future rewards scalarize under the new λ immediately (RewardManager
+        shares this config).  With ``rescalarize`` the bandit's reward
+        statistics are also rebuilt from the decomposed accuracy/energy
+        sums, so the *posterior* shifts toward cheaper arms in the same
+        step — A/A⁻¹ are context-only and stay untouched.
+        """
+        if not (0.0 <= lam <= 1.0):
+            raise ValueError(f"lam must be in [0, 1], got {lam}")
+        if lam == self.config.lam:
+            return
+        self.config.lam = lam
+        # a checkpoint from before decomposed stats existed cannot be
+        # rescalarized: the sums would be partial (or zero) and rebuilding
+        # b/θ from them would silently wipe the restored posterior
+        if rescalarize and self._decomposed_complete:
+            scale = self.config.energy_scale_wh
+            b = (1.0 - lam) * self._b_acc - lam * self._b_cost / scale
+            rsum = (1.0 - lam) * self._acc_sum - lam * self._cost_sum / scale
+            self.policy.rescalarize(b, rsum)
 
     # -- Algorithm 1 ---------------------------------------------------------
 
@@ -116,7 +154,12 @@ class GreenServRouter:
         if fb.model_index != decision.model_index:
             raise ValueError("feedback model does not match routed model")
         r_t = self.rewards.reward(fb.accuracy, fb.energy_wh)
-        self.policy.update(decision.model_index, decision.context.vector, r_t)
+        arm, x = decision.model_index, decision.context.vector
+        self._b_acc[arm] += fb.accuracy * x
+        self._b_cost[arm] += fb.energy_wh * x
+        self._acc_sum[arm] += fb.accuracy
+        self._cost_sum[arm] += fb.energy_wh
+        self.policy.update(arm, x, r_t)
         if oracle_reward is not None:
             self.regret.step(r_t, oracle_reward)
         return r_t
@@ -168,9 +211,25 @@ class GreenServRouter:
     def state_dict(self) -> dict:
         return {"bandit": self.policy.state_dict(),
                 "context": self.context.state_dict(),
-                "n_routed": self.n_routed}
+                "n_routed": self.n_routed,
+                "decomposed": {"b_acc": self._b_acc.copy(),
+                               "b_cost": self._b_cost.copy(),
+                               "acc_sum": self._acc_sum.copy(),
+                               "cost_sum": self._cost_sum.copy()}}
 
     def load_state_dict(self, d: dict) -> None:
         self.policy.load_state_dict(d["bandit"])
         self.context.load_state_dict(d["context"])
         self.n_routed = int(d.get("n_routed", 0))
+        dec = d.get("decomposed")
+        if dec is not None:
+            self._b_acc = np.asarray(dec["b_acc"], np.float64).copy()
+            self._b_cost = np.asarray(dec["b_cost"], np.float64).copy()
+            self._acc_sum = np.asarray(dec["acc_sum"], np.float64).copy()
+            self._cost_sum = np.asarray(dec["cost_sum"], np.float64).copy()
+            self._decomposed_complete = True
+        else:
+            # pre-decomposition checkpoint: the loaded posterior is valid
+            # but cannot be re-derived — set_lambda keeps working, minus
+            # the instant posterior rebuild
+            self._decomposed_complete = False

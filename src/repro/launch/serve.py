@@ -25,6 +25,7 @@ from repro.core.types import ModelProfile, Query, RouterConfig
 from repro.data import stream as stream_lib
 from repro.data import tokenizer as tok
 from repro.serving import ModelEngine, PoolServer
+from repro.telemetry import EnergyBudgetGovernor, Telemetry, dump_jsonl
 
 
 def build_real_pool(arch_ids: List[str], max_batch: int = 4,
@@ -64,17 +65,27 @@ def main() -> None:
                     help="hedge after N scheduler steps in queue")
     ap.add_argument("--fail-engine", default=None,
                     help="inject a failure into this engine mid-run")
+    ap.add_argument("--energy-budget-wh", type=float, default=None,
+                    help="cumulative Wh cap for the run; the governor "
+                         "tightens λ online to stay under it")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the JSONL telemetry dump to this path")
     args = ap.parse_args()
 
     engines, pool = build_real_pool(args.pool)
     config = RouterConfig(lam=args.lam, energy_scale_wh=0.05)
     router = GreenServRouter(config, pool)
-    server = PoolServer(router, engines, tokenizer=tok.encode,
-                        hedge_after_steps=args.hedge,
-                        accuracy_fn=exact_match_accuracy)
-
     queries = stream_lib.make_stream(per_task=max(args.queries // 5, 1))
     queries = queries[: args.queries]
+    governor = None
+    if args.energy_budget_wh is not None:
+        governor = EnergyBudgetGovernor(args.energy_budget_wh,
+                                        horizon_queries=len(queries))
+    telemetry = Telemetry(governor=governor)
+    server = PoolServer(router, engines, tokenizer=tok.encode,
+                        hedge_after_steps=args.hedge,
+                        accuracy_fn=exact_match_accuracy,
+                        telemetry=telemetry)
     t0 = time.monotonic()
     for i, q in enumerate(queries):
         server.submit(q)
@@ -93,6 +104,14 @@ def main() -> None:
     total_wh = sum(r.energy_wh for r in server.responses.values())
     print(f"  total modeled energy: {total_wh:.4f} Wh; mean routing "
           f"overhead {router.mean_decision_ms:.2f} ms/query")
+    print(telemetry.summary())
+    if args.metrics_out:
+        n = dump_jsonl(args.metrics_out, telemetry.registry, telemetry.power,
+                       telemetry.events,
+                       meta={"queries": len(queries), "wall_s": wall,
+                             "lam": args.lam,
+                             "budget_wh": args.energy_budget_wh})
+        print(f"[serve] wrote {n} telemetry rows to {args.metrics_out}")
 
 
 if __name__ == "__main__":

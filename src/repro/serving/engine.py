@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.energy import CostModelParams, EnergyMonitor
+from repro.core.energy import (CostModelParams, EnergyMonitor, JOULES_PER_WH,
+                               decode_step_cost, energy_joules, roofline)
 from repro.core.types import ModelProfile
 from repro.models import api
 from repro.models.config import ModelConfig
@@ -57,6 +58,13 @@ class BaseEngine:
     @property
     def pending(self) -> int:
         raise NotImplementedError
+
+    # -- telemetry hooks -------------------------------------------------------
+
+    def cumulative_joules(self) -> float:
+        """Cumulative metered energy; sampled per scheduler step by the
+        telemetry PowerTrace to derive a watts time-series."""
+        return 0.0
 
     # -- fault-tolerance hooks -------------------------------------------------
 
@@ -90,6 +98,7 @@ class ModelEngine(BaseEngine):
         self._failed = False
         self._last_step_s = time.monotonic()
         self.energy = EnergyMonitor()
+        self._step_joules = 0.0     # per-step metered energy (telemetry)
         self.cost_params = CostModelParams(
             n_params=float(cfg.param_count()),
             n_active_params=float(cfg.active_param_count()),
@@ -151,8 +160,10 @@ class ModelEngine(BaseEngine):
                                               jnp.asarray(tokens))
         next_tok = np.asarray(next_tok)
         self.n_steps += 1
+        self._meter_step()
 
         finished: List[Response] = []
+        now = time.monotonic()
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -164,6 +175,7 @@ class ModelEngine(BaseEngine):
                 if req.prefill_done:
                     req.state = RequestState.DECODE
                     req.generated.append(int(next_tok[i]))
+                    req.first_token_s = now
                 continue
             req.generated.append(int(next_tok[i]))
             hit_eos = req.generated[-1] == req.eos_id
@@ -173,6 +185,24 @@ class ModelEngine(BaseEngine):
                 finished.append(self._finish(i))
         return finished
 
+    def _meter_step(self) -> None:
+        """Accumulate this step's modeled energy from the analytic cost
+        model over the active slots' host-tracked sequence lengths — the
+        time-resolved counterpart of ``measure_query`` (which stays the
+        per-query accounting of record).  No device sync: slot kv lengths
+        are derived from request progress, not the cache."""
+        joules = 0.0
+        for req in self.slots:
+            if req is None or req.state == RequestState.CANCELLED:
+                continue
+            kv_len = max(req.n_prompt_fed + len(req.generated), 1)
+            f, b = decode_step_cost(self.cost_params, kv_len)
+            joules += energy_joules(roofline(f, b, 0.0, self.energy.chips))
+        self._step_joules += joules
+
+    def cumulative_joules(self) -> float:
+        return self._step_joules
+
     def _finish(self, slot: int) -> Response:
         req = self.slots[slot]
         self.slots[slot] = None
@@ -181,12 +211,15 @@ class ModelEngine(BaseEngine):
         out = [t for t in req.generated if t != req.eos_id]
         energy_wh = self.energy.measure_query(
             self.cost_params, len(req.prompt_tokens), len(out))
+        ttft_ms = ((req.first_token_s - req.submit_s) * 1e3
+                   if req.first_token_s else 0.0)
         return Response(
             uid=req.uid, model_name=self.name, tokens=out,
             text=self.detokenize(out), latency_ms=req.latency_ms,
             queue_ms=(req.start_s - req.submit_s) * 1e3,
             energy_wh=energy_wh, input_tokens=len(req.prompt_tokens),
-            output_tokens=len(out), hedged_winner=req.hedged)
+            output_tokens=len(out), hedged_winner=req.hedged,
+            ttft_ms=ttft_ms)
 
     def restart(self) -> List[Request]:
         inflight = [r for r in self.slots if r is not None] + self.queue
@@ -195,6 +228,7 @@ class ModelEngine(BaseEngine):
             r.slot = -1
             r.generated = []
             r.n_prompt_fed = 0
+            r.first_token_s = 0.0
         self.slots = [None] * self.max_batch
         self.queue = []
         self.cache = api.init_cache(self.cfg, self.max_batch, self.max_len)
@@ -209,18 +243,27 @@ class SimEngine(BaseEngine):
     seconds).  ``outcome_fn(query, model_name) -> (accuracy, energy_wh,
     latency_ms, out_tokens)`` encapsulates the calibrated behaviour tables
     (repro.data.profiles).
+
+    ``concurrency`` mirrors ``ModelEngine``'s slot semantics: up to that
+    many queued requests make progress each step, so a deep queue drains
+    ``k`` per step instead of strictly serially (paper-scale benches were
+    previously pessimistic about queueing under load).
     """
 
     def __init__(self, profile: ModelProfile, outcome_fn,
-                 steps_per_query: int = 1):
+                 steps_per_query: int = 1, concurrency: int = 1):
+        if concurrency < 1:
+            raise ValueError(f"concurrency must be >= 1, got {concurrency}")
         self.name = profile.name
         self.profile = profile
         self.outcome_fn = outcome_fn
         self.queue: List[Request] = []
         self.steps_per_query = steps_per_query
+        self.concurrency = concurrency
         self._failed = False
         self._last_step_s = time.monotonic()
         self._progress: Dict[int, int] = {}
+        self._joules = 0.0
 
     def submit(self, req: Request) -> None:
         req.model_name = self.name
@@ -230,6 +273,9 @@ class SimEngine(BaseEngine):
     def pending(self) -> int:
         return len(self.queue)
 
+    def cumulative_joules(self) -> float:
+        return self._joules
+
     def step(self) -> List[Response]:
         if self._failed:
             raise EngineFailure(f"engine {self.name} failed")
@@ -237,32 +283,47 @@ class SimEngine(BaseEngine):
         out: List[Response] = []
         if not self.queue:
             return out
-        req = self.queue[0]
-        if req.state == RequestState.CANCELLED:
-            self.queue.pop(0)
-            return out
-        k = self._progress.get(req.uid, 0) + 1
-        if k < self.steps_per_query:
-            self._progress[req.uid] = k
-            return out
-        self.queue.pop(0)
-        self._progress.pop(req.uid, None)
-        acc, energy_wh, latency_ms, out_tokens = self.outcome_fn(
-            req.query, self.name)
-        req.state = RequestState.DONE
-        req.finish_s = time.monotonic()
-        resp = Response(
-            uid=req.uid, model_name=self.name, tokens=[], text="",
-            latency_ms=latency_ms, queue_ms=0.0, energy_wh=energy_wh,
-            input_tokens=len(req.prompt_tokens), output_tokens=out_tokens)
-        resp.accuracy = acc  # type: ignore[attr-defined]
-        out.append(resp)
+        keep: List[Request] = []
+        active = 0
+        for pos, req in enumerate(self.queue):
+            if active >= self.concurrency:
+                keep.extend(self.queue[pos:])
+                break
+            if req.state == RequestState.CANCELLED:
+                self._progress.pop(req.uid, None)
+                continue                       # drop; frees its slot
+            active += 1
+            if req.start_s == 0.0:
+                req.start_s = time.monotonic()
+            k = self._progress.get(req.uid, 0) + 1
+            if k < self.steps_per_query:
+                self._progress[req.uid] = k
+                keep.append(req)
+                continue
+            self._progress.pop(req.uid, None)
+            acc, energy_wh, latency_ms, out_tokens = self.outcome_fn(
+                req.query, self.name)
+            req.state = RequestState.DONE
+            req.finish_s = time.monotonic()
+            self._joules += energy_wh * JOULES_PER_WH
+            resp = Response(
+                uid=req.uid, model_name=self.name, tokens=[], text="",
+                latency_ms=latency_ms,
+                queue_ms=(req.start_s - req.submit_s) * 1e3,
+                energy_wh=energy_wh,
+                input_tokens=len(req.prompt_tokens),
+                output_tokens=out_tokens, ttft_ms=latency_ms)
+            resp.accuracy = acc  # type: ignore[attr-defined]
+            out.append(resp)
+        self.queue = keep
         return out
 
     def restart(self) -> List[Request]:
         inflight = list(self.queue)
         for r in inflight:
             r.state = RequestState.QUEUED
+            r.start_s = 0.0
         self.queue = []
+        self._progress.clear()
         self._failed = False
         return inflight

@@ -32,6 +32,7 @@ class Request:
     n_prompt_fed: int = 0
     submit_s: float = dataclasses.field(default_factory=time.monotonic)
     start_s: float = 0.0
+    first_token_s: float = 0.0
     finish_s: float = 0.0
     hedged: bool = False
     hedge_of: Optional[int] = None   # uid of the primary request
@@ -68,3 +69,4 @@ class Response:
     input_tokens: int
     output_tokens: int
     hedged_winner: bool = False
+    ttft_ms: float = 0.0     # time to first generated token (0 = unknown)

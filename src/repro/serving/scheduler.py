@@ -20,7 +20,10 @@ concerns of DESIGN §5:
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence
+
+if TYPE_CHECKING:  # pragma: no cover - annotation only
+    from repro.telemetry.hub import Telemetry
 
 import numpy as np
 
@@ -37,7 +40,8 @@ class PoolServer:
                  tokenizer: Optional[Callable[[str], List[int]]] = None,
                  hedge_after_steps: Optional[int] = None,
                  heartbeat_timeout_s: float = 30.0,
-                 accuracy_fn: Optional[Callable] = None):
+                 accuracy_fn: Optional[Callable] = None,
+                 telemetry: Optional["Telemetry"] = None):
         names = router.pool.names
         missing = [n for n in names if n not in engines]
         if missing:
@@ -49,6 +53,9 @@ class PoolServer:
         self.hedge_after_steps = hedge_after_steps
         self.heartbeat_timeout_s = heartbeat_timeout_s
         self.accuracy_fn = accuracy_fn
+        self.telemetry = telemetry
+        if telemetry is not None and telemetry.governor is not None:
+            telemetry.governor.attach(router)
         self.inflight: Dict[int, Request] = {}
         self.hedges: Dict[int, Request] = {}
         self.responses: Dict[int, Response] = {}
@@ -96,6 +103,9 @@ class PoolServer:
             reqs.append(req)
         for name, batch in per_engine.items():
             self.engines[name].submit_many(batch)
+        if self.telemetry is not None:
+            self.telemetry.on_admit(
+                len(reqs), sum(e.pending for e in self.engines.values()))
         return reqs
 
     # -- hedged (straggler-mitigating) dispatch ------------------------------------
@@ -121,6 +131,8 @@ class PoolServer:
                 self.engines[target].submit(hedge)
                 self.hedges[uid] = hedge
                 self.stats["hedges"] += 1
+                if self.telemetry is not None:
+                    self.telemetry.on_hedge(uid, target)
 
     # -- fault tolerance -------------------------------------------------------------
 
@@ -135,6 +147,8 @@ class PoolServer:
         eng = self.engines[name]
         inflight = eng.restart()
         self.stats["restarts"] += 1
+        if self.telemetry is not None:
+            self.telemetry.on_restart(name, len(inflight))
         # flush buffered feedback first so re-routing sees the updated
         # bandit, and so no pending decision consumed by the flush is
         # overwritten by the re-route below
@@ -178,6 +192,8 @@ class PoolServer:
             primary.state = RequestState.CANCELLED
         elif primary_uid in self.hedges:    # primary won
             self.hedges[primary_uid].state = RequestState.CANCELLED
+        hedged_pair = (req.hedge_of is not None
+                       or primary_uid in self.hedges)
         accuracy = getattr(resp, "accuracy", None)
         if accuracy is None:
             accuracy = (self.accuracy_fn(primary.query, resp)
@@ -201,6 +217,12 @@ class PoolServer:
         self.hedges.pop(primary_uid, None)
         self.wait_steps.pop(primary_uid, None)
         self.stats["completed"] += 1
+        if self.telemetry is not None:
+            self.telemetry.on_completion(resp, float(accuracy))
+            if hedged_pair:
+                # the cancelled duplicate's work never completes; charge
+                # the energy budget for it (winner's cost as proxy)
+                self.telemetry.on_duplicate_work(resp.energy_wh)
 
     # -- main loop ---------------------------------------------------------------------
 
@@ -221,6 +243,10 @@ class PoolServer:
         for uid, req in self.inflight.items():
             if req.state == RequestState.QUEUED:
                 self.wait_steps[uid] = self.wait_steps.get(uid, 0) + 1
+        # telemetry last: power samples see the step's energy, and the
+        # governor's λ adjustment lands after this step's feedback flush
+        if self.telemetry is not None:
+            self.telemetry.on_step(self.engines)
         return done
 
     def _find_request(self, uid: int, engine_name: str) -> Optional[Request]:

@@ -1,0 +1,200 @@
+"""The ``Telemetry`` facade: one object the serving stack reports into.
+
+``PoolServer`` calls four hooks (admission, completion, hedge/restart,
+per-step) and this hub fans the data out to the metrics registry, the
+power trace, the event log, and — when governed — the
+``EnergyBudgetGovernor``.  All hooks are O(1) per call with pre-bound
+metric handles, so telemetry stays well under the 5 % step-overhead
+budget asserted by ``benchmarks/bench_telemetry.py``.
+
+Metric conventions (exported names):
+
+  greenserv_admitted_total / greenserv_completed_total{model=}
+  greenserv_hedges_total / greenserv_restarts_total{engine=}
+  greenserv_tokens_total{model=, dir=in|out}
+  greenserv_energy_mwh_total{model=}
+  greenserv_latency_ms{model=} · greenserv_ttft_ms · greenserv_queue_wait_ms
+  greenserv_energy_per_token_mwh{model=}
+  greenserv_queue_depth{engine=} · greenserv_power_watts{source=}
+  greenserv_lambda · greenserv_budget_pressure
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+from repro.telemetry import events as ev
+from repro.telemetry.budget import EnergyBudgetGovernor
+from repro.telemetry.events import EventLog
+from repro.telemetry.metrics import Counter, Histogram, MetricsRegistry
+from repro.telemetry.power import POOL, PowerTrace
+
+
+class Telemetry:
+    def __init__(self,
+                 registry: Optional[MetricsRegistry] = None,
+                 power: Optional[PowerTrace] = None,
+                 events: Optional[EventLog] = None,
+                 governor: Optional[EnergyBudgetGovernor] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.power = power if power is not None else PowerTrace()
+        self.events = events if events is not None else EventLog()
+        self.governor = governor
+        self.clock = clock or time.monotonic
+        r = self.registry
+        self._admitted = r.counter(
+            "greenserv_admitted_total", help="queries admitted to the pool")
+        self._hedges = r.counter(
+            "greenserv_hedges_total", help="straggler hedges fired")
+        self._latency = r.histogram(
+            "greenserv_latency_ms", help="end-to-end request latency (ms)")
+        self._ttft = r.histogram(
+            "greenserv_ttft_ms", help="time to first token (ms)")
+        self._queue_wait = r.histogram(
+            "greenserv_queue_wait_ms", help="time queued before execution")
+        self._lambda = r.gauge(
+            "greenserv_lambda", help="router accuracy-energy trade-off λ")
+        self._pressure = r.gauge(
+            "greenserv_budget_pressure", help="governor pressure in [0,1]")
+        # per-model/per-engine handles, bound lazily on first use
+        self._completed: Dict[str, Counter] = {}
+        self._energy_per_tok: Dict[str, Histogram] = {}
+        self._energy_total: Dict[str, Counter] = {}
+        self._tokens: Dict[tuple, Counter] = {}
+        self._restarts: Dict[str, Counter] = {}
+        self._queue_gauges: Dict[str, object] = {}
+        self._power_gauges: Dict[str, object] = {}
+        self._pool_power_gauge = r.gauge("greenserv_power_watts",
+                                         {"source": "pool"})
+
+    # -- scheduler hooks ----------------------------------------------------
+
+    def on_admit(self, n: int, queue_depth: int) -> None:
+        t = self.clock()
+        self._admitted.inc(n)
+        self.events.emit(ev.ADMIT, t, n=n, queue_depth=queue_depth)
+        if self.governor is not None:
+            self.governor.on_admission(n, t)
+
+    def on_completion(self, resp, accuracy: float) -> None:
+        t = self.clock()
+        model = resp.model_name
+        c = self._completed.get(model)
+        if c is None:
+            r, lbl = self.registry, {"model": model}
+            c = self._completed[model] = r.counter(
+                "greenserv_completed_total", lbl)
+            self._energy_per_tok[model] = r.histogram(
+                "greenserv_energy_per_token_mwh", lbl)
+            self._energy_total[model] = r.counter(
+                "greenserv_energy_mwh_total", lbl)
+            self._tokens[(model, "in")] = r.counter(
+                "greenserv_tokens_total", {"model": model, "dir": "in"})
+            self._tokens[(model, "out")] = r.counter(
+                "greenserv_tokens_total", {"model": model, "dir": "out"})
+        c.inc()
+        self._latency.record(resp.latency_ms)
+        ttft = resp.ttft_ms
+        if ttft:
+            self._ttft.record(ttft)
+        self._queue_wait.record(resp.queue_ms)
+        self._energy_total[model].inc(resp.energy_wh * 1e3)
+        self._tokens[(model, "in")].inc(resp.input_tokens)
+        self._tokens[(model, "out")].inc(resp.output_tokens)
+        if resp.output_tokens > 0:
+            self._energy_per_tok[model].record(
+                resp.energy_wh * 1e3 / resp.output_tokens)
+        self.events.emit(ev.COMPLETE, t, uid=resp.uid, model=model,
+                         latency_ms=resp.latency_ms,
+                         energy_wh=resp.energy_wh, accuracy=accuracy)
+        if self.governor is not None:
+            self.governor.on_completion(resp.energy_wh, t)
+
+    def on_duplicate_work(self, energy_wh: float) -> None:
+        """A hedged pair resolved: the losing duplicate burned energy that
+        never produces a Response.  Charge the budget (winner's energy as
+        a conservative proxy — the loser was cancelled partway, so this
+        overcharges, which errs on the safe side of a Wh cap)."""
+        if self.governor is not None:
+            self.governor.on_extra_energy(energy_wh, self.clock())
+
+    def on_hedge(self, uid: int, target: str) -> None:
+        self._hedges.inc()
+        self.events.emit(ev.HEDGE, self.clock(), uid=uid, target=target)
+
+    def on_restart(self, engine: str, n_requeued: int) -> None:
+        c = self._restarts.get(engine)
+        if c is None:
+            c = self._restarts[engine] = self.registry.counter(
+                "greenserv_restarts_total", {"engine": engine})
+        c.inc()
+        self.events.emit(ev.RESTART, self.clock(), engine=engine,
+                         n_requeued=n_requeued)
+
+    def on_step(self, engines: Dict[str, object]) -> None:
+        """Once per ``PoolServer.step``: power samples, queue depths, and
+        one governor control step."""
+        t = self.clock()
+        joules = {}
+        for name, eng in engines.items():
+            joules[name] = eng.cumulative_joules()
+            qg = self._queue_gauges.get(name)
+            if qg is None:
+                qg = self._queue_gauges[name] = self.registry.gauge(
+                    "greenserv_queue_depth", {"engine": name})
+                self._power_gauges[name] = self.registry.gauge(
+                    "greenserv_power_watts", {"source": name})
+            qg.set(eng.pending)
+        self.power.sample_all(t, joules)
+        for name, pg in self._power_gauges.items():
+            pg.set(self.power.last_watts(name))
+        self._pool_power_gauge.set(self.power.last_watts(POOL))
+        if self.governor is not None:
+            before = self.governor.current_lambda
+            lam = self.governor.step(t)
+            self._lambda.set(lam)
+            self._pressure.set(self.governor.pressure)
+            if before is not None and lam != before:
+                self.events.emit(ev.LAMBDA, t, value=lam,
+                                 pressure=self.governor.pressure)
+
+    # -- reporting ----------------------------------------------------------
+
+    def summary(self) -> str:
+        """Compact human-readable end-of-run summary (used by serve.py)."""
+        lines = ["[telemetry]"]
+        lat = self._latency
+        if lat.count:
+            lines.append(
+                f"  latency   p50 {lat.quantile(0.5):8.1f} ms   "
+                f"p95 {lat.quantile(0.95):8.1f} ms   "
+                f"p99 {lat.quantile(0.99):8.1f} ms   (n={lat.count})")
+        qw = self._queue_wait
+        if qw.count:
+            lines.append(
+                f"  queue     p50 {qw.quantile(0.5):8.1f} ms   "
+                f"p95 {qw.quantile(0.95):8.1f} ms")
+        if self._ttft.count:
+            lines.append(
+                f"  ttft      p50 {self._ttft.quantile(0.5):8.1f} ms   "
+                f"p95 {self._ttft.quantile(0.95):8.1f} ms")
+        if self.power.series(POOL):
+            lines.append(
+                f"  power     avg {self.power.avg_watts():10.1f} W   "
+                f"peak {self.power.peak_watts():10.1f} W   "
+                f"total {self.power.total_wh():.4f} Wh")
+        for model in sorted(self._energy_per_tok):
+            h = self._energy_per_tok[model]
+            if h.count:
+                lines.append(
+                    f"    {model:20s} {h.mean:8.3f} mWh/token "
+                    f"({int(self._completed[model].value)} completions)")
+        if self.governor is not None:
+            g = self.governor.stats()
+            lines.append(
+                f"  budget    {g['cumulative_wh']:.3f} / "
+                f"{g['budget_wh']:.3f} Wh spent   pressure "
+                f"{g['pressure']:.2f}   λ now {g['lambda']:.3f}   "
+                f"({g['lambda_changes']} adjustments)")
+        return "\n".join(lines)

@@ -1,0 +1,99 @@
+"""Direct coverage for the analytic TPU energy model (core.energy)."""
+import numpy as np
+import pytest
+
+from repro.core.energy import (CHIP_IDLE_W, CostModelParams, EnergyMonitor,
+                               JOULES_PER_WH, decode_step_cost, energy_joules,
+                               energy_wh, prefill_cost, roofline)
+
+
+def _params(n=7e9, active=None):
+    return CostModelParams(n_params=n, n_active_params=active or n,
+                           d_model=4096, n_layers=32, kv_heads=8,
+                           head_dim=128)
+
+
+class TestRoofline:
+    def test_bottleneck_selection(self):
+        # overwhelming FLOPs → compute-bound, and so on for each resource
+        assert roofline(1e18, 1e6, 1e3).bottleneck == "compute"
+        assert roofline(1e9, 1e15, 1e3).bottleneck == "memory"
+        assert roofline(1e9, 1e6, 1e14).bottleneck == "collective"
+
+    def test_t_step_is_max_of_terms(self):
+        t = roofline(1e15, 1e12, 1e9, chips=2)
+        assert t.t_step == max(t.t_compute, t.t_memory, t.t_collective)
+
+    def test_chips_divide_time(self):
+        t1 = roofline(1e15, 1e12, 0.0, chips=1)
+        t4 = roofline(1e15, 1e12, 0.0, chips=4)
+        assert t4.t_compute == pytest.approx(t1.t_compute / 4)
+        assert t4.t_memory == pytest.approx(t1.t_memory / 4)
+
+    def test_roofline_fraction_compute_bound_is_one(self):
+        t = roofline(1e18, 1.0, 0.0)
+        assert t.roofline_fraction == pytest.approx(1.0)
+
+    def test_energy_decomposes_static_plus_dynamic(self):
+        t = roofline(1e12, 1e9, 0.0, chips=3)
+        static = CHIP_IDLE_W * t.t_step * 3
+        assert energy_joules(t) > static        # dynamic part is positive
+        assert energy_wh(t) == pytest.approx(energy_joules(t) / JOULES_PER_WH)
+
+
+class TestCostModelMonotonicity:
+    def test_decode_cost_monotone_in_kv_len(self):
+        p = _params()
+        flops = [decode_step_cost(p, kv)[0] for kv in (16, 64, 256, 1024)]
+        bytes_ = [decode_step_cost(p, kv)[1] for kv in (16, 64, 256, 1024)]
+        assert flops == sorted(flops) and len(set(flops)) == 4
+        assert bytes_ == sorted(bytes_) and len(set(bytes_)) == 4
+
+    def test_prefill_cost_monotone_in_seq_len(self):
+        p = _params()
+        flops = [prefill_cost(p, s)[0] for s in (16, 64, 256, 1024)]
+        bytes_ = [prefill_cost(p, s)[1] for s in (16, 64, 256, 1024)]
+        assert flops == sorted(flops) and len(set(flops)) == 4
+        assert bytes_ == sorted(bytes_) and len(set(bytes_)) == 4
+
+    def test_costs_scale_with_batch(self):
+        p = _params()
+        f1, b1 = decode_step_cost(p, 128, batch=1)
+        f4, b4 = decode_step_cost(p, 128, batch=4)
+        assert f4 == pytest.approx(4 * f1)
+        # weights are read once regardless of batch; only KV scales
+        assert b1 < b4 < 4 * b1
+
+    def test_moe_active_params_cut_decode_flops(self):
+        dense = _params(n=14e9)
+        moe = _params(n=14e9, active=2.7e9)
+        assert decode_step_cost(moe, 128)[0] < decode_step_cost(dense, 128)[0]
+
+
+class TestEnergyMonitor:
+    def test_accumulates_totals_and_counts(self):
+        mon = EnergyMonitor()
+        p = _params()
+        wh1 = mon.measure_query(p, input_tokens=128, output_tokens=32)
+        wh2 = mon.measure_query(p, input_tokens=64, output_tokens=8)
+        assert wh1 > 0 and wh2 > 0
+        assert mon.n_queries == 2
+        assert mon.total_wh == pytest.approx(wh1 + wh2)
+        assert mon.total_joules == pytest.approx((wh1 + wh2) * JOULES_PER_WH)
+
+    def test_longer_outputs_cost_more(self):
+        p = _params()
+        short = EnergyMonitor().measure_query(p, 128, 8)
+        long = EnergyMonitor().measure_query(p, 128, 256)
+        assert long > short
+
+    def test_bigger_models_cost_more(self):
+        small = EnergyMonitor().measure_query(_params(n=1e9), 128, 32)
+        big = EnergyMonitor().measure_query(_params(n=30e9), 128, 32)
+        assert big > small
+
+    def test_zero_output_query_still_pays_prefill(self):
+        mon = EnergyMonitor()
+        wh = mon.measure_query(_params(), input_tokens=256, output_tokens=0)
+        assert wh > 0
+        assert mon.n_queries == 1

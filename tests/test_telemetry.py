@@ -1,0 +1,394 @@
+"""Telemetry subsystem: metrics, power traces, export round-trips, and the
+energy-budget governor's accuracy-preserving cap enforcement."""
+import numpy as np
+import pytest
+
+from repro.configs.pool import PAPER_POOL
+from repro.core.pool import ModelPool
+from repro.core.router import GreenServRouter
+from repro.core.types import Feedback, ModelProfile, Query, RouterConfig
+from repro.data.stream import make_stream
+from repro.serving import Request, SimEngine
+from repro.telemetry import (EnergyBudgetGovernor, EventLog, MetricsRegistry,
+                             P2Quantile, PowerTrace, Telemetry,
+                             diurnal_carbon_intensity, dump_jsonl, load_jsonl,
+                             parse_prometheus, to_prometheus)
+
+
+# ---------------------------------------------------------------------------
+# metrics primitives
+# ---------------------------------------------------------------------------
+
+
+class TestMetrics:
+    def test_counter_and_gauge(self):
+        r = MetricsRegistry()
+        c = r.counter("requests_total", {"model": "a"})
+        c.inc()
+        c.inc(2.5)
+        assert c.value == pytest.approx(3.5)
+        g = r.gauge("queue_depth")
+        g.set(7)
+        assert g.value == 7.0
+
+    def test_registry_get_or_create_identity(self):
+        r = MetricsRegistry()
+        assert r.counter("x", {"m": "1"}) is r.counter("x", {"m": "1"})
+        assert r.counter("x", {"m": "1"}) is not r.counter("x", {"m": "2"})
+        with pytest.raises(TypeError):
+            r.gauge("x", {"m": "1"})    # same name+labels, different kind
+
+    def test_p2_quantile_approximates_numpy(self):
+        rng = np.random.default_rng(0)
+        data = rng.lognormal(3.0, 0.7, size=5000)
+        for q in (0.5, 0.95, 0.99):
+            est = P2Quantile(q)
+            for x in data:
+                est.update(x)
+            exact = np.percentile(data, 100 * q)
+            assert est.value == pytest.approx(exact, rel=0.12)
+
+    def test_histogram_summary_stats(self):
+        r = MetricsRegistry()
+        h = r.histogram("latency_ms")
+        for v in [1.0, 2.0, 3.0, 4.0, 100.0]:
+            h.record(v)
+        assert h.count == 5
+        assert h.sum == pytest.approx(110.0)
+        assert h.min == 1.0 and h.max == 100.0
+        assert h.mean == pytest.approx(22.0)
+        assert 1.0 <= h.quantile(0.5) <= 4.0
+
+
+class TestPowerTrace:
+    def test_watts_from_joule_deltas(self):
+        tr = PowerTrace()
+        # 10 J per 2 s per engine → 5 W each, 10 W pool-wide
+        for i, t in enumerate([0.0, 2.0, 4.0, 6.0]):
+            tr.sample_all(t, {"a": 10.0 * i, "b": 10.0 * i})
+        assert tr.last_watts("a") == pytest.approx(5.0)
+        assert tr.last_watts() == pytest.approx(10.0)      # pool
+        assert tr.peak_watts() == pytest.approx(10.0)
+        assert tr.avg_watts() == pytest.approx(10.0)
+        assert tr.total_wh() == pytest.approx(60.0 / 3600.0)
+
+    def test_non_monotone_clock_does_not_divide_by_zero(self):
+        tr = PowerTrace()
+        tr.sample("a", 1.0, 0.0)
+        tr.sample("a", 1.0, 5.0)      # same timestamp: folded, not crashed
+        tr.sample("a", 2.0, 10.0)
+        assert tr.last_watts("a") == pytest.approx(10.0)
+
+
+# ---------------------------------------------------------------------------
+# export round-trips
+# ---------------------------------------------------------------------------
+
+
+def _recorded_registry():
+    r = MetricsRegistry()
+    r.counter("greenserv_completed_total", {"model": "m1"},
+              help="completions").inc(41)
+    r.gauge("greenserv_lambda").set(0.62)
+    h = r.histogram("greenserv_latency_ms", {"model": "m1"})
+    for v in np.linspace(5.0, 500.0, 200):
+        h.record(float(v))
+    return r
+
+
+class TestExport:
+    def test_prometheus_round_trip(self):
+        r = _recorded_registry()
+        parsed = parse_prometheus(to_prometheus(r))
+        assert parsed[("greenserv_completed_total",
+                       (("model", "m1"),))] == 41.0
+        assert parsed[("greenserv_lambda", ())] == pytest.approx(0.62)
+        h = r.find("greenserv_latency_ms", {"model": "m1"})
+        key = ("greenserv_latency_ms",
+               tuple(sorted((("model", "m1"), ("quantile", "0.5")))))
+        assert parsed[key] == pytest.approx(h.quantile(0.5))
+        assert parsed[("greenserv_latency_ms_count",
+                       (("model", "m1"),))] == 200
+
+    def test_jsonl_round_trip(self, tmp_path):
+        r = _recorded_registry()
+        tr = PowerTrace()
+        for i, t in enumerate([0.0, 1.0, 2.0]):
+            tr.sample_all(t, {"eng": 36.0 * i})
+        ev = EventLog()
+        ev.emit("restart", 1.5, engine="eng", n_requeued=3)
+        path = str(tmp_path / "metrics.jsonl")
+        n = dump_jsonl(path, r, tr, ev, meta={"run": "test"})
+        assert n > 0
+        back = load_jsonl(path)
+        assert back["meta"][0]["run"] == "test"
+        counters = {(row["name"], tuple(sorted(row["labels"].items()))): row
+                    for row in back["counter"]}
+        assert counters[("greenserv_completed_total",
+                         (("model", "m1"),))]["value"] == 41.0
+        hist = back["histogram"][0]
+        h = r.find("greenserv_latency_ms", {"model": "m1"})
+        assert hist["count"] == h.count
+        assert hist["sum"] == pytest.approx(h.sum)
+        assert hist["quantiles"]["0.5"] == pytest.approx(h.quantile(0.5))
+        # power series round-trips sample-for-sample
+        pool_rows = [row for row in back["power"]
+                     if row["source"] == "__pool__"]
+        assert [r_["watts"] for r_ in pool_rows] == pytest.approx(
+            [s.watts for s in tr.series()])
+        assert back["event"][0]["engine"] == "eng"
+
+
+# ---------------------------------------------------------------------------
+# governor mechanics (unit level)
+# ---------------------------------------------------------------------------
+
+
+class _RouterStub:
+    def __init__(self, lam=0.4):
+        self.config = RouterConfig(lam=lam)
+        self.calls = []
+
+    def set_lambda(self, lam):
+        self.config.lam = lam
+        self.calls.append(lam)
+
+
+class TestGovernorMechanics:
+    def test_requires_exactly_one_horizon(self):
+        with pytest.raises(ValueError):
+            EnergyBudgetGovernor(1.0)
+        with pytest.raises(ValueError):
+            EnergyBudgetGovernor(1.0, horizon_queries=10, horizon_s=10.0)
+
+    def test_overburn_tightens_lambda(self):
+        router = _RouterStub(lam=0.4)
+        gov = EnergyBudgetGovernor(1.0, horizon_queries=100, router=router)
+        for i in range(30):                       # 10× the sustainable rate
+            gov.on_completion(0.1, t_s=float(i))
+        assert router.config.lam > 0.4
+        assert gov.pressure > 0.5
+
+    def test_underburn_relaxes_lambda_back(self):
+        router = _RouterStub(lam=0.4)
+        gov = EnergyBudgetGovernor(10.0, horizon_queries=100, router=router)
+        for i in range(20):
+            gov.on_completion(0.2, t_s=float(i))  # hot: 2× sustainable
+        tight = router.config.lam
+        assert tight > 0.4
+        assert not gov.exhausted
+        for i in range(20, 60):
+            gov.on_completion(0.001, t_s=float(i))  # cold: 1% of rate
+        assert router.config.lam < tight
+
+    def test_exhaustion_pins_lambda_max(self):
+        router = _RouterStub(lam=0.4)
+        gov = EnergyBudgetGovernor(1.0, horizon_queries=1000, router=router,
+                                   lambda_max=0.85)
+        for i in range(10):
+            gov.on_completion(0.12, t_s=float(i))  # blows the whole budget
+        assert gov.exhausted
+        assert router.config.lam == pytest.approx(0.85)
+
+    def test_wall_clock_refill(self):
+        router = _RouterStub(lam=0.4)
+        gov = EnergyBudgetGovernor(3600.0, horizon_s=3600.0, router=router)
+        gov.step(0.0)
+        gov.on_completion(50.0, t_s=1.0)          # drain far below refill
+        gov.step(1.0)
+        drained = gov.bucket_wh
+        gov.step(100.0)                           # 99 s of ~1 Wh/s refill
+        assert gov.bucket_wh > drained
+
+    def test_carbon_signal_scales_refill(self):
+        dirty = EnergyBudgetGovernor(100.0, horizon_queries=100,
+                                     carbon_fn=lambda t: 2.0)
+        clean = EnergyBudgetGovernor(100.0, horizon_queries=100,
+                                     carbon_fn=lambda t: 0.5)
+        for gov in (dirty, clean):
+            gov.bucket_wh = 0.0
+            gov.on_completion(0.0, t_s=0.0)
+        assert dirty.bucket_wh < clean.bucket_wh
+
+    def test_diurnal_carbon_intensity_cycles(self):
+        period = 86_400.0
+        vals = [diurnal_carbon_intensity(t, period_s=period)
+                for t in np.linspace(0, period, 97)]
+        assert max(vals) > 1.2 and min(vals) < 0.8
+        assert np.mean(vals) == pytest.approx(1.0, abs=0.02)
+
+
+class TestSetLambdaRescalarization:
+    def test_posterior_shifts_without_new_feedback(self):
+        """After set_lambda, the bandit prefers the cheap arm immediately —
+        the decomposed statistics rebuild b/θ under the new trade-off."""
+        profiles = [ModelProfile(name="cheap", family="s", params_b=1.0),
+                    ModelProfile(name="lux", family="s", params_b=30.0)]
+        pool = ModelPool(profiles)
+        router = GreenServRouter(
+            RouterConfig(lam=0.1, energy_scale_wh=0.05, max_arms=4,
+                         alpha_ucb=0.01), pool)
+        q = [Query(uid=i, text=f"question number {i} about physics")
+             for i in range(40)]
+        outcomes = {"cheap": (0.5, 0.01), "lux": (0.9, 0.09)}
+        for i, query in enumerate(q):
+            arm = i % 2                           # force both arms to learn
+            d = router.route(query)
+            name = pool[arm].name
+            acc, e = outcomes[name]
+            router._pending[query.uid] = d.__class__(
+                query_uid=query.uid, model_index=arm, model_name=name,
+                context=d.context, ucb_scores=d.ucb_scores,
+                feasible_mask=d.feasible_mask, overhead_ms=0.0)
+            router.feedback(Feedback(query_uid=query.uid, model_index=arm,
+                                     accuracy=acc, energy_wh=e,
+                                     latency_ms=1.0))
+        probe = Query(uid=999, text="a fresh probe question about physics")
+        assert router.route(probe).model_name == "lux"    # λ=0.1: accuracy
+        router.set_lambda(0.9)
+        probe2 = Query(uid=1000, text="a fresh probe question about physics")
+        assert router.route(probe2).model_name == "cheap"  # λ=0.9: energy
+
+    def test_set_lambda_after_legacy_checkpoint_keeps_posterior(self):
+        """A checkpoint without decomposed stats cannot be rescalarized;
+        set_lambda must not rebuild b/θ from the (all-zero) sums and wipe
+        the restored posterior."""
+        pool = ModelPool([ModelProfile(name="m", family="s", params_b=1.0)])
+        router = GreenServRouter(RouterConfig(lam=0.4, max_arms=2), pool)
+        q = Query(uid=1, text="warm the posterior with one observation")
+        router.route(q)
+        router.feedback(Feedback(query_uid=1, model_index=0, accuracy=0.8,
+                                 energy_wh=0.02, latency_ms=1.0))
+        sd = router.state_dict()
+        del sd["decomposed"]                      # pre-decomposition era
+        pool2 = ModelPool([ModelProfile(name="m", family="s", params_b=1.0)])
+        restored = GreenServRouter(RouterConfig(lam=0.4, max_arms=2), pool2)
+        restored.load_state_dict(sd)
+        b_before = np.asarray(restored.policy.state.b).copy()
+        assert np.any(b_before != 0.0)
+        restored.set_lambda(0.9)
+        assert restored.config.lam == 0.9
+        np.testing.assert_array_equal(
+            np.asarray(restored.policy.state.b), b_before)
+
+    def test_set_lambda_validates_and_updates_rewards(self):
+        pool = ModelPool([ModelProfile(name="m", family="s", params_b=1.0)])
+        router = GreenServRouter(RouterConfig(lam=0.4, max_arms=2), pool)
+        with pytest.raises(ValueError):
+            router.set_lambda(1.5)
+        router.set_lambda(0.7)
+        assert router.config.lam == 0.7
+        assert router.rewards.config.lam == 0.7   # shared config object
+
+
+# ---------------------------------------------------------------------------
+# SimEngine concurrency (satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestSimEngineConcurrency:
+    def _engine(self, concurrency, steps_per_query=1):
+        prof = ModelProfile(name="sim", family="s", params_b=1.0)
+        return SimEngine(prof, lambda q, m: (1.0, 0.001, 1.0, 4),
+                         steps_per_query=steps_per_query,
+                         concurrency=concurrency)
+
+    def _submit(self, eng, n):
+        for i in range(n):
+            eng.submit(Request(query=Query(uid=i, text=f"q{i}"),
+                               prompt_tokens=[1, 2], max_new_tokens=4))
+
+    def test_deep_queue_drains_k_per_step(self):
+        eng = self._engine(concurrency=3)
+        self._submit(eng, 10)
+        assert len(eng.step()) == 3
+        assert eng.pending == 7
+
+    def test_default_concurrency_matches_old_serial_semantics(self):
+        eng = self._engine(concurrency=1, steps_per_query=2)
+        self._submit(eng, 2)
+        assert eng.step() == []                   # head in progress
+        assert len(eng.step()) == 1               # head completes
+        assert eng.pending == 1
+
+    def test_progress_is_per_request_not_per_queue(self):
+        eng = self._engine(concurrency=2, steps_per_query=2)
+        self._submit(eng, 4)
+        assert eng.step() == []                   # two in flight, mid-work
+        assert len(eng.step()) == 2               # both complete together
+        assert len(eng.step()) == 0
+        assert len(eng.step()) == 2
+
+
+def test_hedge_duplicate_energy_charged_to_governor():
+    """The losing hedge duplicate never completes, but its work drew real
+    power — the budget must be charged (winner's energy as proxy)."""
+    profiles = [ModelProfile(name="sim0", family="s", params_b=1.0),
+                ModelProfile(name="sim1", family="s", params_b=2.0)]
+    pool = ModelPool(profiles)
+
+    def outcome(query, model):
+        return 0.5, 0.02, 10.0, 4
+    # fresh bandit routes to arm 0 (scores tie); make it slow so the
+    # hedge onto the fast engine wins
+    engines = {"sim0": SimEngine(profiles[0], outcome, steps_per_query=50),
+               "sim1": SimEngine(profiles[1], outcome, steps_per_query=1)}
+    from repro.serving import PoolServer
+    router = GreenServRouter(RouterConfig(max_arms=4), pool)
+    governor = EnergyBudgetGovernor(10.0, horizon_queries=4)
+    server = PoolServer(router, engines, hedge_after_steps=1,
+                        telemetry=Telemetry(governor=governor))
+    q = make_stream(per_task=1)[0]
+    server.submit(q)
+    for _ in range(10):
+        server.step()
+        if q.uid in server.responses:
+            break
+    assert server.stats["hedges"] == 1
+    resp_wh = sum(r.energy_wh for r in server.responses.values())
+    assert governor.cumulative_wh == pytest.approx(2 * resp_wh)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance run: governed vs ungoverned serving (deterministic)
+# ---------------------------------------------------------------------------
+
+
+_KEEP = {"qwen2.5-0.5b", "qwen2.5-1.5b", "qwen2.5-7b", "llama-3.1-8b",
+         "phi-4-mini-4b", "phi-4-14b", "gemma-3-12b", "qwen2.5-14b"}
+_EXCLUDE = [row[0] for row in PAPER_POOL if row[0] not in _KEEP]
+
+
+def _serve_stream(queries, telemetry, seed=0, batch=10):
+    from benchmarks.common import drive_pool_stream
+    res = drive_pool_stream(queries, telemetry, seed=seed, batch=batch,
+                            exclude=_EXCLUDE, max_arms=16,
+                            fit_classifier=True)
+    return res.mean_accuracy, res.total_energy_wh, res.server
+
+
+def test_governor_holds_cap_and_preserves_accuracy():
+    """Acceptance: a Wh cap at 60% of the ungoverned consumption is held,
+    with mean accuracy within 10% relative of the ungoverned run."""
+    queries = make_stream(per_task=200, seed=0)
+    acc_un, wh_un, _ = _serve_stream(queries, Telemetry())
+    budget = 0.6 * wh_un
+    governor = EnergyBudgetGovernor(budget, horizon_queries=len(queries),
+                                    gain=0.005, lambda_max=0.75)
+    acc_gov, wh_gov, server = _serve_stream(
+        queries, Telemetry(governor=governor))
+    assert wh_gov <= budget, (
+        f"governed {wh_gov:.2f} Wh exceeds {budget:.2f} Wh cap")
+    assert acc_gov >= 0.9 * acc_un, (
+        f"governed accuracy {acc_gov:.3f} below 90% of ungoverned "
+        f"{acc_un:.3f}")
+    # the governor actually acted, and its accounting matches the server's
+    assert len(governor.lambda_history) > 0
+    assert max(l for _, l in governor.lambda_history) > 0.4
+    assert governor.cumulative_wh == pytest.approx(wh_gov, rel=1e-6)
+    # telemetry observed the run end to end
+    tel = server.telemetry
+    assert tel.registry.find("greenserv_admitted_total").value == len(queries)
+    lat = tel.registry.find("greenserv_latency_ms")
+    assert lat is not None and lat.count == len(queries)
+    assert tel.power.total_wh() > 0
