@@ -23,8 +23,8 @@ def main() -> None:
 
     from benchmarks import (bench_baselines, bench_features, bench_kernels,
                             bench_lambda_sweep, bench_model_addition,
-                            bench_overhead, bench_routerbench,
-                            bench_telemetry, roofline)
+                            bench_overhead, bench_prefill,
+                            bench_routerbench, bench_telemetry, roofline)
 
     def section(title, fn):
         t0 = time.time()
@@ -52,6 +52,10 @@ def main() -> None:
             lambda: bench_overhead.main(n_queries=per_task))
     section("Telemetry: overhead + energy-budget governance",
             lambda: bench_telemetry.main(per_task=max(per_task // 2, 60)))
+    section("Chunked prefill: TTFT steps vs chunk size",
+            lambda: bench_prefill.main(
+                prompt_len=48 if args.fast else 96,
+                chunks=[1, 8] if args.fast else [1, 4, 8, 16]))
     section("Kernels: allclose + ref timing", bench_kernels.main)
     section("Roofline table (from dry-run records)",
             lambda: roofline.table("experiments/dryrun"))

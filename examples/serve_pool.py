@@ -22,14 +22,19 @@ from repro.serving import ModelEngine, PoolServer
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--queries", type=int, default=30)
+ap.add_argument("--prefill-chunk", type=int, default=8,
+                help="prompt tokens per engine prefill tick (1 = legacy "
+                     "token-wise; rwkv falls back to 1, qwen-moe chunks)")
 args = ap.parse_args()
 
-engines, pool = build_real_pool(["rwkv6-1.6b", "qwen2-moe-a2.7b"])
+engines, pool = build_real_pool(["rwkv6-1.6b", "qwen2-moe-a2.7b"],
+                                prefill_chunk=args.prefill_chunk)
 router = GreenServRouter(RouterConfig(lam=0.4, energy_scale_wh=0.05,
                                       max_arms=16), pool)
 server = PoolServer(router, engines, tokenizer=tok.encode,
                     hedge_after_steps=30,
-                    accuracy_fn=exact_match_accuracy)
+                    accuracy_fn=exact_match_accuracy,
+                    prefill_chunk=args.prefill_chunk)
 
 queries = stream_lib.make_stream(per_task=max(args.queries // 5, 1))
 queries = queries[: args.queries]

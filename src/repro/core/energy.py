@@ -119,6 +119,29 @@ def decode_step_cost(p: CostModelParams, kv_len: int, batch: int = 1):
     return flops, weight_bytes + kv_bytes
 
 
+def prefill_chunk_cost(p: CostModelParams, n_tokens: int, kv_len: int,
+                       batch: int = 1):
+    """(flops, hbm_bytes) for one *chunked-prefill step*: ``n_tokens``
+    prompt tokens appended per sequence at cache offset ``kv_len`` — the
+    prefill-phase counterpart of ``decode_step_cost``.
+
+    FLOPs ≈ 2·N_active per token (matmuls, compute-bound — prefill
+    amortizes the weight read over the chunk) + attention QK/AV against the
+    growing cache (midpoint kv depth).  HBM ≈ one active-weight read for
+    the whole chunk step (this is the chunking win: the one-token path
+    pays that read per token) + KV read/write at the chunk's depth.
+    Everything is per step; multiply by steps for a whole prompt.
+    """
+    n = max(n_tokens, 1)
+    flops = 2.0 * p.n_active_params * n * batch
+    kv_dim = p.kv_heads * p.head_dim
+    mid_kv = kv_len + (n + 1) / 2.0
+    flops += 4.0 * n * mid_kv * kv_dim * p.n_layers * batch
+    weight_bytes = p.n_active_params * p.dtype_bytes
+    kv_bytes = 2.0 * (kv_len + n) * kv_dim * p.n_layers * p.dtype_bytes * batch
+    return flops, weight_bytes + kv_bytes
+
+
 def prefill_cost(p: CostModelParams, seq_len: int, batch: int = 1):
     """(flops, hbm_bytes) for a full prefill."""
     flops = 2.0 * p.n_active_params * seq_len * batch

@@ -9,6 +9,8 @@ One surface for the training loop, the serving engine, and the dry-run:
     prefill(params, batch, cfg, shard)    last-position logits + (no cache)
     cache_shapes / init_cache             decode cache pytrees
     serve_step(params, token, cache, cfg) one-token decode
+    prefill_chunk(params, toks, cache, …) C-token prompt slab into the cache
+    supports_chunked_prefill(cfg)         which layouts take the chunked path
 
 ``batch`` is a dict: tokens/labels (+ frames for enc-dec audio,
 frontend_embeddings for vlm).  Dispatch on ``cfg.layout``.
@@ -114,7 +116,11 @@ def loss_fn(params: Params, batch: Batch, cfg: ModelConfig,
 def prefill(params: Params, batch: Batch, cfg: ModelConfig,
             shard: ShardFn = _id_shard) -> jax.Array:
     """Returns next-token logits for the *last* position only (B, V) —
-    serving never materializes the full (B, S, V) logits tensor."""
+    serving never materializes the full (B, S, V) logits tensor.
+
+    This one-shot form recomputes from scratch and fills no cache; the
+    serving engine uses ``prefill_chunk`` below, which populates the
+    decode cache slab-by-slab at per-slot offsets."""
     if cfg.layout == "encdec":
         hidden, _ = encdec.forward_hidden(params, batch["frames"],
                                           batch["tokens"], cfg, shard)
@@ -144,3 +150,36 @@ def serve_step(params: Params, token: jax.Array, cache: Params,
     if cfg.layout == "encdec":
         return encdec.decode_step(params, token, cache, cfg, shard)
     return lm.decode_step(params, token, cache, cfg, shard)
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Whether ``prefill_chunk`` exists for this architecture family.
+
+    True for the attention-cached layouts (dense / moe / encdec) whose
+    decode cache is a full-depth positional KV store — a prompt slab can
+    be scattered in at arbitrary per-slot offsets.  Recurrent layouts
+    (rwkv, mamba_hybrid) carry per-token state whose batched chunking
+    needs per-token activity gating inside the scan, and ring-buffer
+    (windowed) caches would overwrite in-window keys mid-chunk; both keep
+    the one-token path (the engine additionally checks the materialized
+    cache for a ``k`` entry to exclude ring layouts).
+    """
+    return cfg.layout in ("dense", "moe", "encdec")
+
+
+def prefill_chunk(params: Params, tokens: jax.Array, cache: Params,
+                  cfg: ModelConfig, n_active: jax.Array,
+                  shard: ShardFn = _id_shard) -> Tuple[jax.Array, Params]:
+    """Populate the decode cache with a (B, C) slab of prompt tokens at
+    per-slot offsets ``cache["length"]``; ``n_active`` (B,) gates how many
+    of the C positions are real per slot (0 = idle slot this step).
+
+    Returns (logits (B, C, V), new cache).  The logits at position
+    n_active[b]-1 are the next-token logits slot b would have produced by
+    feeding the same tokens one at a time through ``serve_step`` — the
+    chunked/one-shot equivalence asserted by tests/test_prefill_chunk.py.
+    """
+    if cfg.layout == "encdec":
+        return encdec.prefill_chunk_step(params, tokens, cache, cfg,
+                                         n_active, shard)
+    return lm.prefill_chunk_step(params, tokens, cache, cfg, n_active, shard)

@@ -1,4 +1,5 @@
-"""GQA attention: chunked flash-reference prefill + single-token decode.
+"""GQA attention: chunked flash-reference prefill, chunked serving prefill
+against a decode cache, and single-token decode.
 
 One code path serves full, sliding-window, and local:global attention — the
 per-layer ``window`` scalar parameterizes the mask (window == seq_len ⇒ full
@@ -202,6 +203,95 @@ def attention_decode_ring(params: Params, x: jax.Array, k_ring: jax.Array,
     out = decode_attend_ring(q, k_ring, v_ring, lengths)
     out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
     return shard(out, "act_btd"), (k_ring, v_ring)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill against a decode cache (serving).
+# ---------------------------------------------------------------------------
+
+
+def chunk_attend(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 window, positions: jax.Array) -> jax.Array:
+    """Multi-query generalization of ``decode_attend``: a slab of C new
+    tokens attends into a full-depth cache.
+
+    q: (B, C, Hq, hd); caches: (B, S, Hk, hd); positions: (B, C) absolute
+    position of each query token (tokens), so slot b's query c attends to
+    cache positions (positions[b,c] - window, positions[b,c]] — exactly the
+    visibility ``decode_attend`` gives a lone token at cache length
+    positions[b,c].  Within a chunk, earlier chunk tokens are visible to
+    later ones because their K/V were scattered into the cache *before*
+    this attend (see ``attention_prefill_chunk``).
+
+    Scores accumulate fp32; K/V stay in storage dtype (same rationale as
+    ``decode_attend``).  A row whose mask is empty (inactive padding slot)
+    degrades to a uniform softmax over NEG_INF scores — finite garbage the
+    caller discards, never NaN.
+    """
+    b, c, hq, hd = q.shape
+    s, hk = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hk
+    scale = hd ** -0.5
+    q5 = q.reshape(b, c, hk, group, hd)
+    scores = jnp.einsum("bchgd,bshd->bhgcs", q5, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s, dtype=jnp.int32)
+    win = jnp.asarray(window, jnp.int32)
+    valid = ((pos[None, None] <= positions[:, :, None])
+             & (pos[None, None] > positions[:, :, None] - win))   # (B, C, S)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgcs,bshd->bchgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, c, hq, hd).astype(q.dtype)
+
+
+def attention_prefill_chunk(params: Params, x: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, window, lengths: jax.Array,
+                            active: jax.Array, cfg: ModelConfig,
+                            shard: ShardFn = _id_shard, rope: bool = True,
+                            cross: bool = False):
+    """One attention layer over a C-token prompt slab at per-slot offsets.
+
+    x: (B, C, d) slab activations; ``lengths``: (B,) tokens already in the
+    cache per slot (the slab lands at positions lengths..lengths+C-1);
+    ``active``: (B, C) bool — position c is a real token iff
+    c < n_active[b].  Inactive (padding) positions write nothing into the
+    cache and their outputs are discarded by the caller.
+
+    Self-attention (``cross=False``) scatters the slab's K/V into the cache
+    at per-slot offsets first (a one-hot einsum — the chunk counterpart of
+    the masked-``where`` append in ``attention_decode``, equally gather-free
+    under SPMD), then attends write-then-read so intra-chunk causality comes
+    from the position mask alone.  Cross-attention reads the static
+    encoder-side cache and writes nothing.
+
+    Returns (out (B, C, d), (k_cache, v_cache)).
+    """
+    dt = cfg.jnp_dtype()
+    b, c, _ = x.shape
+    offs = jnp.arange(c, dtype=jnp.int32)
+    positions = lengths[:, None] + offs[None, :]            # (B, C)
+    q, k_new, v_new = project_qkv(params, x, positions, cfg, rope=rope)
+    if cross:
+        n_f = k_cache.shape[1]
+        # every encoder position visible to every query token
+        pos_all = jnp.broadcast_to(jnp.int32(n_f - 1), positions.shape)
+        out = chunk_attend(q, k_cache, v_cache, jnp.int32(n_f), pos_all)
+    else:
+        s = k_cache.shape[1]
+        onehot = ((jnp.arange(s, dtype=jnp.int32)[None, None]
+                   == positions[:, :, None])
+                  & active[:, :, None])                      # (B, C, S)
+        w = onehot.astype(jnp.float32)
+        k_scat = jnp.einsum("bcs,bchd->bshd", w, k_new.astype(jnp.float32))
+        v_scat = jnp.einsum("bcs,bchd->bshd", w, v_new.astype(jnp.float32))
+        touched = onehot.any(axis=1)[:, :, None, None]       # (B, S, 1, 1)
+        k_cache = jnp.where(touched, k_scat.astype(k_cache.dtype), k_cache)
+        v_cache = jnp.where(touched, v_scat.astype(v_cache.dtype), v_cache)
+        out = chunk_attend(q, k_cache, v_cache, window, positions)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return shard(out, "act_btd"), (k_cache, v_cache)
 
 
 # ---------------------------------------------------------------------------

@@ -165,6 +165,52 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
                         cache_shapes(cfg, batch, max_len))
 
 
+def prefill_chunk_step(params: Params, tokens: jax.Array, cache: Params,
+                       cfg: ModelConfig, n_active: jax.Array,
+                       shard: ShardFn = _id_shard):
+    """Decoder-side chunked prefill: a C-token slab of prompt tokens per
+    slot into the self-attention cache, cross-attending the (static,
+    precomputed) encoder-side ``cross_k``/``cross_v``.
+
+    Same contract as ``lm.prefill_chunk_step``: tokens (B, C), n_active
+    (B,) gates per-slot activity, returns (logits (B, C, V), new cache)
+    with lengths advanced by n_active.  Cross K/V are read-only — the
+    engine precomputes them once per request (or leaves them zero for the
+    stub frontend), exactly as in ``decode_step``.
+    """
+    dtype = cfg.jnp_dtype()
+    b, c = tokens.shape
+    lengths = cache["length"]
+    active = (jnp.arange(c, dtype=jnp.int32)[None, :]
+              < n_active[:, None])
+    x = shard(embed(params["tok"], tokens, dtype), "act_btd")
+    s_max = cache["k"].shape[2]
+
+    def body(x, xs):
+        layer, k_c, v_c, ck, cv = xs
+        h = rms_norm(x, layer["norm_self"], cfg.norm_eps)
+        h, (k_c, v_c) = attn.attention_prefill_chunk(
+            layer["self_attn"], h, k_c, v_c, jnp.int32(s_max), lengths,
+            active, cfg, shard)
+        x = x + h
+        h = rms_norm(x, layer["norm_cross"], cfg.norm_eps)
+        h, _ = attn.attention_prefill_chunk(
+            layer["cross_attn"], h, ck, cv, jnp.int32(ck.shape[1]), lengths,
+            active, cfg, shard, rope=False, cross=True)
+        x = x + h
+        x = x + mlp(layer["mlp"], rms_norm(x, layer["norm_mlp"], cfg.norm_eps),
+                    dtype)
+        return shard(x, "act_btd"), (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = rms_norm(x, params["norm_dec"], cfg.norm_eps)
+    logits = unembed(params["tok"], x, dtype)
+    new_cache = dict(cache, k=k_new, v=v_new, length=lengths + n_active)
+    return shard(logits, "act_btv"), new_cache
+
+
 def decode_step(params: Params, token: jax.Array, cache: Params,
                 cfg: ModelConfig, shard: ShardFn = _id_shard):
     """Scan over layers with cache xs/ys — see lm.decode_step."""

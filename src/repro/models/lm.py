@@ -15,6 +15,7 @@ Public surface:
     forward(params, tokens, cfg, ...)       logits (+ aux loss), full-sequence
     init_cache / cache_shapes               decode cache pytrees
     decode_step(params, token, cache, cfg)  one-token serve step
+    prefill_chunk_step(params, toks, ...)   C-token prompt slab into the cache
 """
 from __future__ import annotations
 
@@ -272,6 +273,74 @@ def cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> Params:
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                         cache_shapes(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Chunked serving prefill (dense / moe, full-depth caches)
+# ---------------------------------------------------------------------------
+
+
+def prefill_chunk_step(params: Params, tokens: jax.Array, cache: Params,
+                       cfg: ModelConfig, n_active: jax.Array,
+                       shard: ShardFn = _id_shard
+                       ) -> Tuple[jax.Array, Params]:
+    """Populate the decode cache with a C-token prompt slab per slot.
+
+    tokens: (B, C) int32 prompt tokens; slot b's slab lands at cache
+    positions cache["length"][b] .. +n_active[b]-1.  ``n_active``: (B,)
+    int32 — how many of the C positions are real tokens for each slot
+    (0 = slot idle this step; positions past n_active are padding whose
+    cache writes are masked out and whose logits are garbage).
+
+    Returns (logits (B, C, V), new cache with per-slot lengths advanced by
+    n_active).  With C == 1 and n_active == 1 this computes exactly what
+    ``decode_step`` computes — the serving engine exploits that to run
+    mixed ticks where decode slots ride along in slot 0 of the slab.
+
+    Only full-depth KV layouts chunk (dense/moe with a ``k`` cache);
+    ring-buffer (windowed) caches and recurrent layouts fall back to the
+    one-token path — see ``api.supports_chunked_prefill``.
+    """
+    if cfg.layout not in ("dense", "moe") or "k" not in cache:
+        raise ValueError(
+            f"chunked prefill unsupported for layout={cfg.layout!r} / "
+            f"cache keys {sorted(cache)} (ring-buffer caches and recurrent "
+            f"state need per-token gating; use the one-token decode path)")
+    dtype = cfg.jnp_dtype()
+    b, c = tokens.shape
+    lengths = cache["length"]
+    active = (jnp.arange(c, dtype=jnp.int32)[None, :]
+              < n_active[:, None])                           # (B, C)
+    x = shard(embed(params["tok"], tokens, dtype), "act_btd")
+    s_max = cache["k"].shape[2]
+    windows = jnp.asarray(cfg.layer_windows(s_max), jnp.int32)
+
+    def body(x, xs):
+        layer, k_c, v_c, window = xs
+        h = rms_norm(x, layer["norm_attn"], cfg.norm_eps)
+        h, (k_c, v_c) = attn.attention_prefill_chunk(
+            layer["attn"], h, k_c, v_c, window, lengths, active, cfg, shard)
+        x = x + h
+        h = rms_norm(x, layer["norm_mlp"], cfg.norm_eps)
+        if cfg.layout == "dense":
+            x = x + mlp(layer["mlp"], h, dtype)
+        else:
+            # padding rows flow through MoE dispatch but cannot evict real
+            # tokens: ``active`` is a prefix of the slab and the capacity
+            # sort is stable, so real tokens always rank first within an
+            # expert (invariant documented at moe._dispatch_group); their
+            # outputs land on padding rows the caller discards.
+            m, _ = moe_lib.moe_block(layer["moe"], h, cfg,
+                                     use_pallas=cfg.use_pallas)
+            x = x + m
+        return shard(x, "act_btd"), (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], windows))
+    new_cache = {"k": k_new, "v": v_new, "length": lengths + n_active}
+    x = rms_norm(x, params["norm_f"], cfg.norm_eps)
+    logits = unembed(params["tok"], x, dtype)
+    return shard(logits, "act_btv"), new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -80,6 +80,14 @@ def _dispatch_group(params: Params, xf: jax.Array, cfg: ModelConfig,
     c = expert_capacity(t, e, k, cfg.capacity_factor)
 
     # --- sort-based dispatch -------------------------------------------------
+    # The serving chunked-prefill path feeds slabs whose *trailing* rows may
+    # be padding (lm.prefill_chunk_step masks them out afterwards).  Two
+    # properties keep padding from ever evicting a real token here: the
+    # argsort below is STABLE (jnp default), so within an expert group
+    # earlier slab positions — the real tokens, always a prefix — rank
+    # first; and expert_capacity lane-pads to >= 8 >= t for slabs of <= 8,
+    # so capacity cannot bind at the default chunk size at all.  Guarded by
+    # tests/test_prefill_chunk.py::test_moe_mixed_tick_padding_is_harmless.
     flat_expert = idx.reshape(-1)                      # (t*k,)
     flat_token = jnp.repeat(jnp.arange(t), k)          # source token per slot
     flat_weight = weights.reshape(-1)

@@ -3,18 +3,25 @@
 Two backends behind one interface:
 
   * ``ModelEngine``  — a real JAX model (reduced config on CPU, full config
-    on TPU): one jitted ``serve_step`` over a (max_batch,)-slot KV/state
-    cache with *per-slot lengths*; prompt tokens stream through the same
-    decode step (chunked prefill is a TODO noted in DESIGN), then greedy
-    generation until EOS/max_new_tokens.  New requests are admitted into
-    free slots between steps — in-flight requests are never stalled
-    (continuous batching).
+    on TPU) over a (max_batch,)-slot KV/state cache with *per-slot
+    lengths*.  Prompts run as **chunked prefill**: each engine tick feeds
+    every prefilling slot up to ``prefill_chunk`` prompt tokens through one
+    jitted chunk-step (in-flight decode slots ride along with one token
+    each, so continuous batching never stalls), then greedy decode runs
+    one token per tick through the cheaper jitted ``serve_step`` until
+    EOS/max_new_tokens.  A long prompt therefore reaches its first token
+    in ~len/chunk ticks instead of len ticks.  Architectures whose state
+    can't take a slab at an offset (recurrent rwkv/mamba, ring-buffer
+    windowed caches) transparently fall back to one prompt token per tick
+    — see ``api.supports_chunked_prefill``.
   * ``SimEngine``    — a timing/energy/accuracy model of a pool member
     (paper's 16-model pool has no public weights in this container); used
     by the paper-scale benchmarks.
 
-Both report per-query energy via the analytic TPU model (core.energy) — the
-zeus stand-in of DESIGN §4.
+Both report per-query energy (Wh) via the analytic TPU model (core.energy)
+— the zeus stand-in of DESIGN §4 — and time-resolved per-step joules,
+split by phase (prefill is compute-bound, decode bandwidth-bound; the
+telemetry layer tags and charges the two separately).
 """
 from __future__ import annotations
 
@@ -27,7 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.energy import (CostModelParams, EnergyMonitor, JOULES_PER_WH,
-                               decode_step_cost, energy_joules, roofline)
+                               decode_step_cost, energy_joules,
+                               prefill_chunk_cost, roofline)
 from repro.core.types import ModelProfile
 from repro.models import api
 from repro.models.config import ModelConfig
@@ -45,6 +53,7 @@ class BaseEngine:
     profile: ModelProfile
 
     def submit(self, req: Request) -> None:
+        """Enqueue one routed request (admitted into a slot on a later step)."""
         raise NotImplementedError
 
     def submit_many(self, reqs: List[Request]) -> None:
@@ -53,22 +62,35 @@ class BaseEngine:
             self.submit(req)
 
     def step(self) -> List[Response]:
+        """Advance the engine one tick; returns requests finished this tick."""
         raise NotImplementedError
 
     @property
     def pending(self) -> int:
+        """Queued + in-slot request count (the scheduler's load signal)."""
         raise NotImplementedError
+
+    def set_prefill_chunk(self, n: int) -> None:
+        """Prompt tokens consumed per prefill tick (1 = token-wise legacy
+        path).  No-op for engines without a real prefill (SimEngine)."""
 
     # -- telemetry hooks -------------------------------------------------------
 
     def cumulative_joules(self) -> float:
-        """Cumulative metered energy; sampled per scheduler step by the
-        telemetry PowerTrace to derive a watts time-series."""
+        """Cumulative metered energy in joules; sampled per scheduler step
+        by the telemetry PowerTrace to derive a watts time-series."""
         return 0.0
+
+    def cumulative_joules_by_phase(self) -> Dict[str, float]:
+        """Cumulative metered joules split by serving phase ("prefill" /
+        "decode"); the values sum to ``cumulative_joules()``.  Engines
+        without a phase split report everything as decode."""
+        return {"prefill": 0.0, "decode": self.cumulative_joules()}
 
     # -- fault-tolerance hooks -------------------------------------------------
 
     def heartbeat(self) -> float:
+        """Monotonic seconds timestamp of the last completed step."""
         return getattr(self, "_last_step_s", 0.0)
 
     def inject_failure(self) -> None:
@@ -80,11 +102,20 @@ class BaseEngine:
 
 
 class ModelEngine(BaseEngine):
-    """Real-model engine: continuous batching over a slotted cache."""
+    """Real-model engine: continuous batching over a slotted cache.
+
+    ``prefill_chunk`` sets how many prompt tokens each prefilling slot
+    consumes per tick (1 = token-wise path; the launcher default is 8).
+    The chunked path applies only to layouts with a full-depth positional
+    KV cache (``api.supports_chunked_prefill`` + a ``k`` cache entry —
+    ring-buffer windowed caches are excluded); everything else silently
+    clamps to 1.
+    """
 
     def __init__(self, name: str, cfg: ModelConfig, key: jax.Array,
                  max_batch: int = 4, max_len: int = 256,
-                 params=None, detokenize: Optional[Callable] = None):
+                 params=None, detokenize: Optional[Callable] = None,
+                 prefill_chunk: int = 1):
         self.name = name
         self.cfg = dataclasses.replace(cfg, kv_update="where")
         self.max_batch = max_batch
@@ -98,7 +129,8 @@ class ModelEngine(BaseEngine):
         self._failed = False
         self._last_step_s = time.monotonic()
         self.energy = EnergyMonitor()
-        self._step_joules = 0.0     # per-step metered energy (telemetry)
+        # per-step metered joules by serving phase (telemetry reads these)
+        self._phase_joules = {"prefill": 0.0, "decode": 0.0}
         self.cost_params = CostModelParams(
             n_params=float(cfg.param_count()),
             n_active_params=float(cfg.active_param_count()),
@@ -114,6 +146,33 @@ class ModelEngine(BaseEngine):
             return jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32), cache
 
         self._jit_step = jax.jit(_step, donate_argnums=(1,))
+        self._jit_chunk_step = None
+        self.prefill_chunk = 1
+        self.set_prefill_chunk(prefill_chunk)
+
+    def set_prefill_chunk(self, n: int) -> None:
+        """Set the prompt tokens consumed per prefill tick and (re)build
+        the jitted chunk-step.  Clamped to 1 when the architecture can't
+        take a slab at an offset (recurrent state, ring-buffer caches)."""
+        n = max(int(n), 1)
+        if not (api.supports_chunked_prefill(self.cfg) and "k" in self.cache):
+            n = 1
+        if n == self.prefill_chunk:
+            return      # keep the warmed jit cache (hot-add re-push path)
+        self.prefill_chunk = n
+        if n == 1:
+            self._jit_chunk_step = None
+            return
+
+        def _chunk_step(params, cache, tokens, n_active):
+            logits, cache = api.prefill_chunk(params, tokens, cache,
+                                              self.cfg, n_active)
+            # next token per slot from its last *active* position's logits
+            idx = jnp.maximum(n_active - 1, 0)
+            last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)
+            return jnp.argmax(last[:, 0], axis=-1).astype(jnp.int32), cache
+
+        self._jit_chunk_step = jax.jit(_chunk_step, donate_argnums=(1,))
 
     # -- queueing ----------------------------------------------------------------
 
@@ -141,12 +200,27 @@ class ModelEngine(BaseEngine):
     # -- the continuous-batching step ---------------------------------------------
 
     def step(self) -> List[Response]:
+        """One engine tick.  Runs the jitted chunk-step when any slot still
+        has prompt tokens pending (and chunking is enabled/supported),
+        otherwise the cheaper one-token decode step.  Returns the requests
+        that finished this tick."""
         if self._failed:
             raise EngineFailure(f"engine {self.name} failed")
         self._admit()
         self._last_step_s = time.monotonic()
         if not any(self.slots):
             return []
+        need_prefill = any(
+            req is not None and req.state != RequestState.CANCELLED
+            and not req.prefill_done for req in self.slots)
+        if self._jit_chunk_step is not None and need_prefill:
+            return self._chunk_tick()
+        return self._decode_tick()
+
+    def _decode_tick(self) -> List[Response]:
+        """Legacy one-token tick: every live slot feeds one token (next
+        prompt token while prefilling, last generated token while
+        decoding) through the jitted ``serve_step``."""
         tokens = np.zeros((self.max_batch, 1), np.int32)
         for i, req in enumerate(self.slots):
             if req is None:
@@ -160,8 +234,56 @@ class ModelEngine(BaseEngine):
                                               jnp.asarray(tokens))
         next_tok = np.asarray(next_tok)
         self.n_steps += 1
-        self._meter_step()
+        # token-wise prefill runs the decode kernel, so it costs a decode
+        # step — but it is still prefill work, tagged as such
+        self._meter_step([
+            ("prefill" if not req.prefill_done else "decode", 1,
+             max(req.n_prompt_fed + len(req.generated), 1))
+            for req in self.slots
+            if req is not None and req.state != RequestState.CANCELLED])
+        fed_prompt = [0 if (req is None or req.prefill_done) else 1
+                      for req in self.slots]
+        return self._advance_slots(next_tok, fed_prompt)
 
+    def _chunk_tick(self) -> List[Response]:
+        """Chunked-prefill tick: prefilling slots consume up to
+        ``prefill_chunk`` prompt tokens, decode slots ride along with one
+        token each (continuous batching never stalls), all in one jitted
+        chunk-step."""
+        C = self.prefill_chunk
+        tokens = np.zeros((self.max_batch, C), np.int32)
+        n_active = np.zeros((self.max_batch,), np.int32)
+        fed_prompt = [0] * self.max_batch
+        meter = []
+        for i, req in enumerate(self.slots):
+            if req is None or req.state == RequestState.CANCELLED:
+                continue
+            kv_start = req.n_prompt_fed + len(req.generated)
+            if not req.prefill_done:
+                n = min(C, len(req.prompt_tokens) - req.n_prompt_fed)
+                tokens[i, :n] = req.prompt_tokens[
+                    req.n_prompt_fed:req.n_prompt_fed + n]
+                n_active[i] = n
+                fed_prompt[i] = n
+                meter.append(("prefill", n, kv_start))
+            else:
+                tokens[i, 0] = (req.generated[-1] if req.generated
+                                else req.prompt_tokens[-1])
+                n_active[i] = 1
+                meter.append(("decode", 1, max(kv_start, 1)))
+        next_tok, self.cache = self._jit_chunk_step(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(n_active))
+        next_tok = np.asarray(next_tok)
+        self.n_steps += 1
+        self._meter_step(meter)
+        return self._advance_slots(next_tok, fed_prompt)
+
+    def _advance_slots(self, next_tok: np.ndarray,
+                       fed_prompt: List[int]) -> List[Response]:
+        """Shared post-step bookkeeping: advance prompt cursors, record
+        TTFT at the first generated token, append decode tokens, finish
+        on EOS / max_new_tokens / cache overflow."""
         finished: List[Response] = []
         now = time.monotonic()
         for i, req in enumerate(self.slots):
@@ -170,8 +292,8 @@ class ModelEngine(BaseEngine):
             if req.state == RequestState.CANCELLED:
                 self.slots[i] = None
                 continue
-            if not req.prefill_done:
-                req.n_prompt_fed += 1
+            if fed_prompt[i]:
+                req.n_prompt_fed += fed_prompt[i]
                 if req.prefill_done:
                     req.state = RequestState.DECODE
                     req.generated.append(int(next_tok[i]))
@@ -185,23 +307,28 @@ class ModelEngine(BaseEngine):
                 finished.append(self._finish(i))
         return finished
 
-    def _meter_step(self) -> None:
-        """Accumulate this step's modeled energy from the analytic cost
-        model over the active slots' host-tracked sequence lengths — the
-        time-resolved counterpart of ``measure_query`` (which stays the
-        per-query accounting of record).  No device sync: slot kv lengths
-        are derived from request progress, not the cache."""
-        joules = 0.0
-        for req in self.slots:
-            if req is None or req.state == RequestState.CANCELLED:
-                continue
-            kv_len = max(req.n_prompt_fed + len(req.generated), 1)
-            f, b = decode_step_cost(self.cost_params, kv_len)
-            joules += energy_joules(roofline(f, b, 0.0, self.energy.chips))
-        self._step_joules += joules
+    def _meter_step(self, fed) -> None:
+        """Accumulate this tick's modeled energy from the analytic cost
+        model, split by phase.  ``fed`` lists (phase, n_tokens, kv_len)
+        per live slot: prefill slabs are charged ``prefill_chunk_cost``
+        (one weight read amortized over the slab), decode tokens
+        ``decode_step_cost``.  This is the time-resolved counterpart of
+        ``measure_query`` (which stays the per-query Wh accounting of
+        record).  No device sync: kv lengths come from request progress,
+        not the cache."""
+        for phase, n_tokens, kv_len in fed:
+            if phase == "prefill" and n_tokens > 1:
+                f, b = prefill_chunk_cost(self.cost_params, n_tokens, kv_len)
+            else:
+                f, b = decode_step_cost(self.cost_params, max(kv_len, 1))
+            self._phase_joules[phase] += energy_joules(
+                roofline(f, b, 0.0, self.energy.chips))
 
     def cumulative_joules(self) -> float:
-        return self._step_joules
+        return self._phase_joules["prefill"] + self._phase_joules["decode"]
+
+    def cumulative_joules_by_phase(self) -> Dict[str, float]:
+        return dict(self._phase_joules)
 
     def _finish(self, slot: int) -> Response:
         req = self.slots[slot]

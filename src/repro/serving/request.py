@@ -20,6 +20,17 @@ class RequestState(enum.Enum):
 
 @dataclasses.dataclass
 class Request:
+    """One routed query's engine-side lifecycle state.
+
+    Token counts are in tokenizer tokens; every ``*_s`` field is a
+    ``time.monotonic()`` timestamp in seconds (0.0 = not reached yet):
+    ``submit_s`` at routing, ``start_s`` at slot admission (queue wait
+    ends), ``first_token_s`` at the first *generated* token (TTFT), and
+    ``finish_s`` at completion.  ``n_prompt_fed`` is the prompt cursor —
+    how many prompt tokens the engine has consumed into the cache
+    (advanced by 1 on the token-wise path, by up to ``prefill_chunk`` per
+    chunked-prefill tick)."""
+
     query: Query
     prompt_tokens: List[int]
     max_new_tokens: int
@@ -52,6 +63,7 @@ class Request:
 
     @property
     def latency_ms(self) -> float:
+        """End-to-end milliseconds (submit → finish); 0.0 while unfinished."""
         if self.finish_s and self.submit_s:
             return (self.finish_s - self.submit_s) * 1e3
         return 0.0
@@ -59,6 +71,12 @@ class Request:
 
 @dataclasses.dataclass
 class Response:
+    """The completed-request record the scheduler hands back: latencies in
+    milliseconds (``latency_ms`` end-to-end, ``queue_ms`` submission →
+    admission, ``ttft_ms`` submission → first generated token), energy in
+    watt-hours (``energy_wh``, both phases), token counts in tokenizer
+    tokens."""
+
     uid: int
     model_name: str
     tokens: List[int]

@@ -35,13 +35,21 @@ from repro.serving.request import Request, RequestState, Response
 
 
 class PoolServer:
+    """The GreenServ scheduler: routes queries, steps engines, closes the
+    bandit loop.  ``hedge_after_steps`` is measured in scheduler steps
+    spent QUEUED; ``heartbeat_timeout_s`` in wall-clock seconds;
+    ``prefill_chunk`` (prompt tokens per engine prefill tick) is pushed
+    into every engine at construction and again on ``add_engine``, so a
+    server-level setting governs the whole pool."""
+
     def __init__(self, router: GreenServRouter,
                  engines: Dict[str, BaseEngine],
                  tokenizer: Optional[Callable[[str], List[int]]] = None,
                  hedge_after_steps: Optional[int] = None,
                  heartbeat_timeout_s: float = 30.0,
                  accuracy_fn: Optional[Callable] = None,
-                 telemetry: Optional["Telemetry"] = None):
+                 telemetry: Optional["Telemetry"] = None,
+                 prefill_chunk: Optional[int] = None):
         names = router.pool.names
         missing = [n for n in names if n not in engines]
         if missing:
@@ -54,6 +62,10 @@ class PoolServer:
         self.heartbeat_timeout_s = heartbeat_timeout_s
         self.accuracy_fn = accuracy_fn
         self.telemetry = telemetry
+        self.prefill_chunk = prefill_chunk
+        if prefill_chunk is not None:
+            for eng in engines.values():
+                eng.set_prefill_chunk(prefill_chunk)
         if telemetry is not None and telemetry.governor is not None:
             telemetry.governor.attach(router)
         self.inflight: Dict[int, Request] = {}
@@ -68,13 +80,17 @@ class PoolServer:
     # -- pool growth (paper §6.3.4) ---------------------------------------------
 
     def add_engine(self, profile: ModelProfile, engine: BaseEngine) -> None:
-        """Zero-calibration model addition: new engine + fresh bandit arm."""
+        """Zero-calibration model addition: new engine + fresh bandit arm.
+        The server's ``prefill_chunk`` setting applies to late joiners too."""
+        if self.prefill_chunk is not None:
+            engine.set_prefill_chunk(self.prefill_chunk)
         self.engines[profile.name] = engine
         self.router.pool.add(profile)   # fires the router's add-arm hook
 
     # -- submission ---------------------------------------------------------------
 
     def submit(self, query: Query) -> Request:
+        """Route and enqueue one query (a batch of one; tools/demos)."""
         return self.submit_batch([query])[0]
 
     def submit_batch(self, queries: Sequence[Query]) -> List[Request]:
@@ -227,6 +243,10 @@ class PoolServer:
     # -- main loop ---------------------------------------------------------------------
 
     def step(self) -> List[Response]:
+        """One scheduler tick: health checks, hedging, one ``step()`` per
+        engine (each engine tick is one jitted chunk-prefill or decode
+        call), one batched feedback flush, one telemetry/governor step.
+        Returns the responses completed this tick."""
         done: List[Response] = []
         self._check_engines()
         self._maybe_hedge()
@@ -259,6 +279,7 @@ class PoolServer:
         return req
 
     def run_until_drained(self, max_steps: int = 100_000) -> None:
+        """Step until no request is in flight (or raise after max_steps)."""
         for _ in range(max_steps):
             if not self.inflight:
                 return

@@ -108,6 +108,10 @@ class EnergyBudgetGovernor:
         self.lambda_history: List[Tuple[float, float]] = []
         self._last_refill_s: Optional[float] = None
         self.exhausted = False
+        # phase ledger (Wh): attribution of the metered burn to prefill vs
+        # decode, fed per step by Telemetry.on_step from the engines'
+        # phase-tagged joule counters
+        self.phase_wh = {"prefill": 0.0, "decode": 0.0}
 
     def attach(self, router) -> None:
         self.router = router
@@ -140,6 +144,16 @@ class EnergyBudgetGovernor:
         self.bucket_wh = max(self.bucket_wh - energy_wh, -self.capacity_wh)
         if self.control_on_completion:
             self._control(t_s)
+
+    def on_phase_energy(self, prefill_wh: float, decode_wh: float) -> None:
+        """Attribute a step's metered energy (Wh deltas) to the prefill /
+        decode phases.  This is a *ledger*, not a second drain: the bucket
+        is still drained by per-completion Wh (which already includes both
+        phases) — the split tells operators (and ``stats()``) which phase
+        is consuming the budget, e.g. whether tightening λ should shed
+        long-prompt traffic or long generations."""
+        self.phase_wh["prefill"] += max(prefill_wh, 0.0)
+        self.phase_wh["decode"] += max(decode_wh, 0.0)
 
     def on_completion(self, energy_wh: float, t_s: float = 0.0) -> None:
         """Drain the bucket by a completion's measured energy; in query-
@@ -262,4 +276,6 @@ class EnergyBudgetGovernor:
             "lambda_changes": len(self.lambda_history),
             "completed": self.completed,
             "exhausted": self.exhausted,
+            "prefill_wh": self.phase_wh["prefill"],
+            "decode_wh": self.phase_wh["decode"],
         }

@@ -20,12 +20,19 @@ LAMBDA = "lambda"           # governor changed the router's λ
 
 
 class Event(NamedTuple):
+    """One discrete serving occurrence: ``kind`` (ADMIT/COMPLETE/HEDGE/
+    RESTART/LAMBDA), ``t_s`` the caller-clock timestamp in seconds, and a
+    flat ``payload`` (energies in Wh, latencies in ms, counts unitless)."""
+
     kind: str
     t_s: float
     payload: Dict[str, object]
 
 
 class EventLog:
+    """Ring-buffered event stream (newest ``maxlen`` kept) with O(1)
+    per-kind counts; timestamps in seconds from the telemetry clock."""
+
     def __init__(self, maxlen: int = 8192):
         self._events: Deque[Event] = deque(maxlen=maxlen)
         self.counts: KindCounter = KindCounter()

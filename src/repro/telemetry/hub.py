@@ -16,7 +16,13 @@ Metric conventions (exported names):
   greenserv_latency_ms{model=} · greenserv_ttft_ms · greenserv_queue_wait_ms
   greenserv_energy_per_token_mwh{model=}
   greenserv_queue_depth{engine=} · greenserv_power_watts{source=}
+  greenserv_energy_joules_total{phase=prefill|decode}
   greenserv_lambda · greenserv_budget_pressure
+
+Energy is phase-split: engines report cumulative joules tagged prefill
+(prompt ingestion, compute-bound) vs decode (generation, bandwidth-bound);
+the hub exports phase counters + phase watts gauges, samples phase series
+into the PowerTrace, and feeds the governor's phase ledger.
 """
 from __future__ import annotations
 
@@ -27,7 +33,9 @@ from repro.telemetry import events as ev
 from repro.telemetry.budget import EnergyBudgetGovernor
 from repro.telemetry.events import EventLog
 from repro.telemetry.metrics import Counter, Histogram, MetricsRegistry
-from repro.telemetry.power import POOL, PowerTrace
+from repro.telemetry.power import (PHASE_DECODE, PHASE_PREFILL, POOL,
+                                   PowerTrace)
+from repro.core.energy import JOULES_PER_WH
 
 
 class Telemetry:
@@ -67,6 +75,17 @@ class Telemetry:
         self._power_gauges: Dict[str, object] = {}
         self._pool_power_gauge = r.gauge("greenserv_power_watts",
                                          {"source": "pool"})
+        # phase-split energy: cumulative joules per serving phase across
+        # the pool (prefill = prompt ingestion, decode = generation)
+        self._phase_energy = {
+            ph: r.counter("greenserv_energy_joules_total", {"phase": ph},
+                          help="pool-wide metered joules by serving phase")
+            for ph in ("prefill", "decode")}
+        self._phase_power_gauges = {
+            "prefill": r.gauge("greenserv_power_watts",
+                               {"source": "prefill"}),
+            "decode": r.gauge("greenserv_power_watts", {"source": "decode"})}
+        self._phase_last: Dict[str, float] = {"prefill": 0.0, "decode": 0.0}
 
     # -- scheduler hooks ----------------------------------------------------
 
@@ -133,12 +152,18 @@ class Telemetry:
                          n_requeued=n_requeued)
 
     def on_step(self, engines: Dict[str, object]) -> None:
-        """Once per ``PoolServer.step``: power samples, queue depths, and
-        one governor control step."""
+        """Once per ``PoolServer.step``: power samples (per engine, pool,
+        and per serving phase), queue depths, phase-tagged joule counters,
+        and one governor control step."""
         t = self.clock()
         joules = {}
+        phase_tot = {"prefill": 0.0, "decode": 0.0}
         for name, eng in engines.items():
-            joules[name] = eng.cumulative_joules()
+            phases = eng.cumulative_joules_by_phase()
+            joules[name] = phases.get("prefill", 0.0) + phases.get(
+                "decode", 0.0)
+            phase_tot["prefill"] += phases.get("prefill", 0.0)
+            phase_tot["decode"] += phases.get("decode", 0.0)
             qg = self._queue_gauges.get(name)
             if qg is None:
                 qg = self._queue_gauges[name] = self.registry.gauge(
@@ -146,10 +171,24 @@ class Telemetry:
                 self._power_gauges[name] = self.registry.gauge(
                     "greenserv_power_watts", {"source": name})
             qg.set(eng.pending)
-        self.power.sample_all(t, joules)
+        self.power.sample_all(t, joules, phase_joules=phase_tot)
+        deltas = {}
+        for ph, cur in phase_tot.items():
+            deltas[ph] = max(cur - self._phase_last[ph], 0.0)
+            if deltas[ph]:
+                self._phase_energy[ph].inc(deltas[ph])
+            self._phase_last[ph] = cur
         for name, pg in self._power_gauges.items():
             pg.set(self.power.last_watts(name))
         self._pool_power_gauge.set(self.power.last_watts(POOL))
+        self._phase_power_gauges["prefill"].set(
+            self.power.last_watts(PHASE_PREFILL))
+        self._phase_power_gauges["decode"].set(
+            self.power.last_watts(PHASE_DECODE))
+        if self.governor is not None and (deltas["prefill"]
+                                          or deltas["decode"]):
+            self.governor.on_phase_energy(deltas["prefill"] / JOULES_PER_WH,
+                                          deltas["decode"] / JOULES_PER_WH)
         if self.governor is not None:
             before = self.governor.current_lambda
             lam = self.governor.step(t)
@@ -184,6 +223,13 @@ class Telemetry:
                 f"  power     avg {self.power.avg_watts():10.1f} W   "
                 f"peak {self.power.peak_watts():10.1f} W   "
                 f"total {self.power.total_wh():.4f} Wh")
+        pre_wh = self.power.total_wh(PHASE_PREFILL)
+        dec_wh = self.power.total_wh(PHASE_DECODE)
+        if pre_wh or dec_wh:
+            frac = pre_wh / max(pre_wh + dec_wh, 1e-12)
+            lines.append(
+                f"  phases    prefill {pre_wh:.4f} Wh ({frac:5.1%})   "
+                f"decode {dec_wh:.4f} Wh")
         for model in sorted(self._energy_per_tok):
             h = self._energy_per_tok[model]
             if h.count:

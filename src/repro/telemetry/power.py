@@ -7,7 +7,12 @@ with running average/peak and total Wh derivable from the same samples.
 
 The trace is sampled once per scheduler step with a caller-supplied clock
 (wall time in live serving, virtual time in simulation) so power numbers
-stay meaningful in both regimes.
+stay meaningful in both regimes.  Units throughout: timestamps in seconds,
+rates in watts, cumulative counters in joules (divide by 3600 for Wh).
+
+Besides per-engine series and the pool aggregate, two reserved phase
+series (``PHASE_PREFILL`` / ``PHASE_DECODE``) split the pool's burn by
+serving phase when engines report phase-tagged joules.
 """
 from __future__ import annotations
 
@@ -17,6 +22,10 @@ from typing import Deque, Dict, Iterable, List, NamedTuple, Optional, Tuple
 from repro.core.energy import JOULES_PER_WH
 
 POOL = "__pool__"           # reserved source name for the pool-wide series
+PHASE_PREFILL = "__prefill__"   # pool-wide prefill-phase joules series
+PHASE_DECODE = "__decode__"     # pool-wide decode-phase joules series
+_RESERVED = (POOL, PHASE_PREFILL, PHASE_DECODE)
+PHASE_SOURCES = {"prefill": PHASE_PREFILL, "decode": PHASE_DECODE}
 
 
 class PowerSample(NamedTuple):
@@ -68,18 +77,30 @@ class PowerTrace:
         if watts > self._peak[name]:
             self._peak[name] = watts
 
-    def sample_all(self, t_s: float, joules_by_source: Dict[str, float]
-                   ) -> None:
-        """One scheduler-step sample: every engine plus the pool total."""
+    def sample_all(self, t_s: float, joules_by_source: Dict[str, float],
+                   phase_joules: Optional[Dict[str, float]] = None) -> None:
+        """One scheduler-step sample: every engine plus the pool total.
+
+        ``phase_joules`` optionally carries pool-wide cumulative joules per
+        serving phase ({"prefill": J, "decode": J}); each phase becomes its
+        own reserved series (``PHASE_PREFILL`` / ``PHASE_DECODE``) so watts
+        can be read per phase — prefill is compute-bound and decode
+        bandwidth-bound, and lumping them hides which roofline is burning
+        the budget."""
         for name, j in joules_by_source.items():
             self.sample(name, t_s, j)
         self.sample(POOL, t_s, sum(joules_by_source.values()))
+        for phase, j in (phase_joules or {}).items():
+            src = PHASE_SOURCES.get(phase)
+            if src is not None:
+                self.sample(src, t_s, j)
 
     # -- readers ------------------------------------------------------------
 
     @property
     def sources(self) -> List[str]:
-        return [n for n in self._series if n != POOL]
+        """Engine source names (reserved pool/phase aggregates excluded)."""
+        return [n for n in self._series if n not in _RESERVED]
 
     def series(self, name: str = POOL) -> List[PowerSample]:
         return list(self._series.get(name, ()))

@@ -392,3 +392,60 @@ def test_governor_holds_cap_and_preserves_accuracy():
     lat = tel.registry.find("greenserv_latency_ms")
     assert lat is not None and lat.count == len(queries)
     assert tel.power.total_wh() > 0
+
+
+# ---------------------------------------------------------------------------
+# phase-tagged energy (chunked prefill)
+# ---------------------------------------------------------------------------
+
+
+class _PhaseFakeEngine:
+    """Minimal BaseEngine stand-in reporting phase-tagged joules."""
+
+    def __init__(self):
+        self.pending = 0
+        self.joules = {"prefill": 0.0, "decode": 0.0}
+
+    def cumulative_joules(self):
+        return sum(self.joules.values())
+
+    def cumulative_joules_by_phase(self):
+        return dict(self.joules)
+
+
+def test_hub_tags_prefill_vs_decode_energy():
+    """Telemetry.on_step splits the pool burn by serving phase: counters,
+    watts gauges, PowerTrace series, and the governor's phase ledger all
+    see prefill and decode separately."""
+    from repro.telemetry.power import PHASE_DECODE, PHASE_PREFILL
+
+    governor = EnergyBudgetGovernor(10.0, horizon_queries=100)
+    clock = iter(float(i) for i in range(100))
+    tel = Telemetry(governor=governor, clock=lambda: next(clock))
+    eng = _PhaseFakeEngine()
+    engines = {"m0": eng}
+    tel.on_step(engines)                       # anchor sample
+    eng.joules = {"prefill": 36.0, "decode": 0.0}     # 36 J = 0.01 Wh
+    tel.on_step(engines)
+    eng.joules = {"prefill": 36.0, "decode": 72.0}
+    tel.on_step(engines)
+
+    pre = tel.registry.find("greenserv_energy_joules_total",
+                            {"phase": "prefill"})
+    dec = tel.registry.find("greenserv_energy_joules_total",
+                            {"phase": "decode"})
+    assert pre.value == pytest.approx(36.0)
+    assert dec.value == pytest.approx(72.0)
+    # phase watts: 36 J over 1 s then 72 J over 1 s
+    assert tel.power.last_watts(PHASE_PREFILL) == pytest.approx(0.0)
+    assert tel.power.last_watts(PHASE_DECODE) == pytest.approx(72.0)
+    assert tel.power.total_wh(PHASE_PREFILL) == pytest.approx(36.0 / 3600.0)
+    # phase pseudo-sources never leak into the per-engine source list
+    assert set(tel.power.sources) == {"m0"}
+    # governor ledger: attribution only (the bucket drains per completion)
+    stats = governor.stats()
+    assert stats["prefill_wh"] == pytest.approx(0.01)
+    assert stats["decode_wh"] == pytest.approx(0.02)
+    assert governor.cumulative_wh == 0.0
+    # the end-of-run summary surfaces the split
+    assert "phases" in tel.summary()

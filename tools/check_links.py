@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Fail on broken relative links in markdown files.
+
+Usage:
+    python tools/check_links.py README.md docs [more files or dirs...]
+
+Checks every ``[text](target)`` markdown link:
+
+  * external schemes (http/https/mailto) are skipped — CI stays hermetic;
+  * relative file targets must exist (resolved against the linking file);
+  * ``path#anchor`` / ``#anchor`` targets into a markdown file must match
+    a heading in that file (GitHub slug rules: lowercase, spaces → ``-``,
+    punctuation dropped).
+
+Exit status 0 when every link resolves, 1 otherwise (one line per broken
+link).  Dependency-free by design: runs in the CI docs job before any
+project requirements are installed.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Iterable, List, Tuple
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown, lowercase, drop punctuation,
+    spaces to hyphens."""
+    text = re.sub(r"[`*_\[\]()]", "", heading).strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(md_file: Path) -> set:
+    text = md_file.read_text(encoding="utf-8")
+    text = CODE_FENCE_RE.sub("", text)
+    return {github_slug(h) for h in HEADING_RE.findall(text)}
+
+
+def iter_md_files(args: Iterable[str]) -> List[Path]:
+    files: List[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            print(f"check_links: no such file or directory: {a}",
+                  file=sys.stderr)
+            sys.exit(2)
+    return files
+
+
+def check_file(md_file: Path) -> List[Tuple[str, str]]:
+    """Returns (target, reason) for each broken link in ``md_file``."""
+    text = CODE_FENCE_RE.sub("", md_file.read_text(encoding="utf-8"))
+    broken: List[Tuple[str, str]] = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(EXTERNAL):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = (md_file.parent / path_part).resolve() if path_part \
+            else md_file.resolve()
+        if path_part and not dest.exists():
+            broken.append((target, "file not found"))
+            continue
+        if anchor and dest.suffix == ".md" and dest.is_file():
+            if anchor.lower() not in anchors_of(dest):
+                broken.append((target, f"no heading for #{anchor}"))
+    return broken
+
+
+def main(argv: List[str]) -> int:
+    files = iter_md_files(argv or ["README.md", "docs"])
+    n_links = 0
+    failures = 0
+    for f in files:
+        broken = check_file(f)
+        n_links += len([t for t in LINK_RE.findall(
+            CODE_FENCE_RE.sub("", f.read_text(encoding="utf-8")))])
+        for target, reason in broken:
+            print(f"{f}: broken link -> {target} ({reason})")
+            failures += 1
+    print(f"check_links: {len(files)} files, {n_links} links, "
+          f"{failures} broken")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
