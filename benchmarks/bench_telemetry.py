@@ -85,7 +85,7 @@ def measure_overhead(queries: Sequence[Query], trials: int = 3) -> dict:
 
 
 def run_governed(queries: Sequence[Query], budget_wh: float,
-                 lam: float = 0.4, seed: int = 0) -> StreamResult:
+                 lam: float = 0.4, seed: int = 0) -> ServeResult:
     governor = EnergyBudgetGovernor(budget_wh,
                                     horizon_queries=len(queries))
     return run_stream(queries, Telemetry(governor=governor),

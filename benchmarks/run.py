@@ -21,10 +21,11 @@ def main() -> None:
 
     t_start = time.time()
 
-    from benchmarks import (bench_baselines, bench_features, bench_kernels,
-                            bench_lambda_sweep, bench_model_addition,
-                            bench_overhead, bench_prefill,
-                            bench_routerbench, bench_telemetry, roofline)
+    from benchmarks import (bench_baselines, bench_cache, bench_features,
+                            bench_kernels, bench_lambda_sweep,
+                            bench_model_addition, bench_overhead,
+                            bench_prefill, bench_routerbench,
+                            bench_telemetry, roofline)
 
     def section(title, fn):
         t0 = time.time()
@@ -56,6 +57,9 @@ def main() -> None:
             lambda: bench_prefill.main(
                 prompt_len=48 if args.fast else 96,
                 chunks=[1, 8] if args.fast else [1, 4, 8, 16]))
+    section("GreenCache: hit rates + avoided joules vs --cache-mode off",
+            lambda: bench_cache.main(n_queries=36 if args.fast else 120,
+                                     smoke=args.fast))
     section("Kernels: allclose + ref timing", bench_kernels.main)
     section("Roofline table (from dry-run records)",
             lambda: roofline.table("experiments/dryrun"))

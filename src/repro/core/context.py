@@ -266,7 +266,9 @@ class ContextGenerator:
         # paths structurally identical (route_batch's equivalence guarantee)
         return self.batch([text])[0]
 
-    def batch(self, texts: Sequence[str]) -> list:
+    def batch(self, texts: Sequence[str],
+              embeddings: Optional[np.ndarray] = None,
+              task_labels: Optional[np.ndarray] = None) -> list:
         """Featurize a query batch: List[ContextVector], index-aligned.
 
         Embedding + task classification are vectorized; the k-means
@@ -274,18 +276,26 @@ class ContextGenerator:
         each update shifts the centroid the next assignment sees — this is
         exactly what Q successive ``__call__``s would compute, so batched
         and sequential featurization agree bitwise.
+
+        ``embeddings`` (n, dim) / ``task_labels`` (n,), optional: reuse
+        feature work a caller already did on the same texts (the serving
+        scheduler's cache probe embeds and classifies every query before
+        routing).  The embedder and classifier are deterministic, so
+        passing their own outputs back is bitwise identical to recomputing
+        — the k-means *updates* still happen here, in arrival order.
         """
         if not texts:
             return []
         n = len(texts)
         t0 = time.perf_counter()
-        if self.use_task:
-            task_labels = self.task_classifier.predict_batch(texts)
-        else:
+        if not self.use_task:
             task_labels = np.zeros(n, dtype=np.int64)
+        elif task_labels is None:
+            task_labels = self.task_classifier.predict_batch(texts)
         t1 = time.perf_counter()
         if self.use_cluster:
-            embs = self.embedder.encode_batch(texts)
+            embs = (embeddings if embeddings is not None
+                    else self.embedder.encode_batch(texts))
             clusters = [self.kmeans.update(e) for e in embs]
         else:
             clusters = [0] * n

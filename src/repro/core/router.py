@@ -100,7 +100,11 @@ class GreenServRouter:
         # structurally identical (see route_batch's equivalence guarantee)
         return self.route_batch([query])[0]
 
-    def route_batch(self, queries: Sequence[Query]) -> List[RouteDecision]:
+    def route_batch(self, queries: Sequence[Query],
+                    energy_discounts_wh: Optional[np.ndarray] = None,
+                    embeddings: Optional[np.ndarray] = None,
+                    task_labels: Optional[np.ndarray] = None
+                    ) -> List[RouteDecision]:
         """Route an admitted batch in one shot (the serving hot path).
 
         Featurization is vectorized (one embed + one classifier matmul for
@@ -109,10 +113,31 @@ class GreenServRouter:
         batched cost.  Arm choices are identical to calling ``route`` on
         each query in order (k-means updates are applied in arrival order,
         and LinUCB selection is deterministic given the bandit state).
+
+        ``energy_discounts_wh`` (Q, n_models), optional: expected Wh each
+        arm would *save* on each query — e.g. a prefix-KV cache hit whose
+        spliced tokens skip prefill (``PoolServer`` fills this from the
+        engines' prefix indexes).  The discount enters the decision as the
+        energy term of the reward it cancels, ``λ·ΔWh/energy_scale`` added
+        to the arm's score, so a warm-cache arm can win over a nominally
+        cheaper cold one.  The bandit's *posterior* is untouched: the
+        realized saving arrives through feedback (cheap completions), the
+        discount only tilts this decision.  Only rows with a nonzero
+        discount are re-picked — undiscounted queries keep their original
+        arm, so a stochastic policy's exploration draws survive except on
+        the queries the tilt is actually about (where the discounted
+        greedy choice deliberately wins).
+
+        ``embeddings`` (Q, dim) / ``task_labels`` (Q,) forward feature
+        work the caller already did on these texts (the scheduler's cache
+        probe) into ``ContextGenerator.batch`` — bitwise identical to
+        recomputing, since embedder and classifier are deterministic.
         """
         if not queries:
             return []
-        ctxs = self.context.batch([q.text for q in queries])
+        ctxs = self.context.batch([q.text for q in queries],
+                                  embeddings=embeddings,
+                                  task_labels=task_labels)
         t0 = time.perf_counter()
         masks = [self.pool.feasible_mask(q) for q in queries]
         # a concurrent pool.add() mid-batch yields ragged rows; pad earlier
@@ -124,6 +149,25 @@ class GreenServRouter:
             feasible[i, : m.shape[0]] = m
         x = np.stack([c.vector for c in ctxs])
         arms, scores = self.policy.select_batch(x, feasible)
+        if energy_discounts_wh is not None:
+            d = np.asarray(energy_discounts_wh, np.float32)
+            if d.shape[0] != len(queries):
+                raise ValueError(
+                    f"energy_discounts_wh rows {d.shape[0]} != batch "
+                    f"{len(queries)}")
+            rows = np.flatnonzero(d.any(axis=1))
+            if rows.size:
+                bonus = np.zeros_like(scores)
+                w = min(d.shape[1], bonus.shape[1])
+                bonus[:, :w] = (self.config.lam * d[:, :w]
+                                / self.config.energy_scale_wh)
+                scores = scores + bonus
+                # infeasible arms carry NEG_INF scores; a finite bonus
+                # cannot resurrect them, so an argmax re-pick of the
+                # discounted rows suffices
+                arms = arms.copy()
+                arms[rows] = np.argmax(scores[rows], axis=1).astype(
+                    arms.dtype)
         batch_ms = (time.perf_counter() - t0) * 1e3
         per_query_ms = batch_ms / len(queries)
         self.decision_ms_total += batch_ms

@@ -1,14 +1,15 @@
 """Serving launcher: GreenServ pool server over real reduced-config models.
 
 Builds a heterogeneous pool of small-but-real JAX models (one per requested
-arch family), the GreenServ router with all three context features, and the
+arch family), the GreenServ router with all three context features, the
+GreenCache reuse layer (``--cache-mode``, default prefix-KV reuse), and the
 continuous-batching scheduler; then drives a synthetic query stream through
 it with hedging and fault injection available as flags.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --queries 60 \
         --pool granite-3-8b rwkv6-1.6b qwen2-moe-a2.7b --hedge 40 \
-        --prefill-chunk 8
+        --prefill-chunk 8 --cache-mode full --semantic-threshold 0.92
 """
 from __future__ import annotations
 
@@ -19,6 +20,7 @@ from typing import Dict, List
 import jax
 import numpy as np
 
+from repro.cache import CACHE_MODES, GreenCache
 from repro.configs import ARCH_IDS, get_config
 from repro.core.pool import ModelPool
 from repro.core.router import GreenServRouter
@@ -80,6 +82,18 @@ def main() -> None:
                     help="prompt tokens consumed per engine prefill tick "
                          "(1 = token-wise legacy path; TTFT drops roughly "
                          "by this factor on attention-cached layouts)")
+    ap.add_argument("--cache-mode", default="prefix", choices=CACHE_MODES,
+                    help="GreenCache layers: prefix (launcher default — "
+                         "cross-query prompt-KV reuse), semantic "
+                         "(near-duplicate response cache), full (both), "
+                         "off")
+    ap.add_argument("--kv-cache-blocks", type=int, default=512,
+                    help="per-engine prefix-KV pool capacity in blocks "
+                         "(8 tokens each, host memory; LRU-evicted)")
+    ap.add_argument("--semantic-threshold", type=float, default=0.92,
+                    help="cosine similarity floor for a semantic response "
+                         "cache hit (task-type/cluster guards always "
+                         "apply)")
     args = ap.parse_args()
 
     engines, pool = build_real_pool(args.pool,
@@ -93,11 +107,15 @@ def main() -> None:
         governor = EnergyBudgetGovernor(args.energy_budget_wh,
                                         horizon_queries=len(queries))
     telemetry = Telemetry(governor=governor)
+    cache = GreenCache(mode=args.cache_mode,
+                       kv_cache_blocks=args.kv_cache_blocks,
+                       semantic_threshold=args.semantic_threshold)
     server = PoolServer(router, engines, tokenizer=tok.encode,
                         hedge_after_steps=args.hedge,
                         accuracy_fn=exact_match_accuracy,
                         telemetry=telemetry,
-                        prefill_chunk=args.prefill_chunk)
+                        prefill_chunk=args.prefill_chunk,
+                        cache=cache)
     t0 = time.monotonic()
     for i, q in enumerate(queries):
         server.submit(q)
@@ -116,6 +134,16 @@ def main() -> None:
     total_wh = sum(r.energy_wh for r in server.responses.values())
     print(f"  total modeled energy: {total_wh:.4f} Wh; mean routing "
           f"overhead {router.mean_decision_ms:.2f} ms/query")
+    if args.cache_mode != "off":
+        cs = cache.stats()
+        sem = cs.get("semantic", {})
+        pre = cs.get("prefix", {})
+        hit_tokens = sum(p["hit_tokens"] for p in pre.values())
+        blocks = sum(p["blocks"] for p in pre.values())
+        print(f"  cache[{args.cache_mode}]: semantic hits "
+              f"{sem.get('hits', 0)}/{sem.get('lookups', 0)}; prefix hit "
+              f"tokens {hit_tokens}; {blocks} KV blocks resident "
+              f"({server.stats['cache_hits']} short-circuits)")
     print(telemetry.summary())
     if args.metrics_out:
         n = dump_jsonl(args.metrics_out, telemetry.registry, telemetry.power,

@@ -10,6 +10,7 @@ One surface for the training loop, the serving engine, and the dry-run:
     cache_shapes / init_cache             decode cache pytrees
     serve_step(params, token, cache, cfg) one-token decode
     prefill_chunk(params, toks, cache, …) C-token prompt slab into the cache
+    splice_prefix(cache, slot, k, v)      reused prompt-prefix KV into a slot
     supports_chunked_prefill(cfg)         which layouts take the chunked path
 
 ``batch`` is a dict: tokens/labels (+ frames for enc-dec audio,
@@ -165,6 +166,28 @@ def supports_chunked_prefill(cfg: ModelConfig) -> bool:
     cache for a ``k`` entry to exclude ring layouts).
     """
     return cfg.layout in ("dense", "moe", "encdec")
+
+
+def splice_prefix(cache: Params, slot: int, k_block, v_block) -> Params:
+    """Splice a reused prompt-prefix KV block into one decode slot.
+
+    ``k_block``/``v_block``: (L, P, Hk, hd) KV captured from a completed
+    prompt whose first P tokens match this slot's prompt.  Valid exactly
+    where chunked prefill is (full-depth positional ``k``/``v`` caches —
+    dense/moe/encdec; the enc-dec splice covers the decoder self-KV only,
+    cross-KV is per-request).  The slot's length is set to P, so the
+    engine's next chunk step continues prefill at offset P — the cached
+    prefix is never recomputed.
+    """
+    if "k" not in cache:
+        raise ValueError(
+            f"prefix splice needs a full-depth positional KV cache; got "
+            f"cache keys {sorted(cache)} (ring-buffer and recurrent "
+            f"layouts recompute their prompts)")
+    from repro.models import attention as attn
+    k_c, v_c = attn.splice_kv(cache["k"], cache["v"], slot, k_block, v_block)
+    length = cache["length"].at[slot].set(k_block.shape[1])
+    return dict(cache, k=k_c, v=v_c, length=length)
 
 
 def prefill_chunk(params: Params, tokens: jax.Array, cache: Params,

@@ -74,6 +74,11 @@ class BaseEngine:
         """Prompt tokens consumed per prefill tick (1 = token-wise legacy
         path).  No-op for engines without a real prefill (SimEngine)."""
 
+    def set_prefix_cache(self, cache) -> None:
+        """Attach a ``repro.cache.PrefixCache`` for cross-query prompt-KV
+        reuse.  No-op for engines without a materialized KV cache
+        (SimEngine) — real engines override and gate on layout support."""
+
     # -- telemetry hooks -------------------------------------------------------
 
     def cumulative_joules(self) -> float:
@@ -86,6 +91,17 @@ class BaseEngine:
         "decode"); the values sum to ``cumulative_joules()``.  Engines
         without a phase split report everything as decode."""
         return {"prefill": 0.0, "decode": self.cumulative_joules()}
+
+    def cumulative_joules_avoided(self) -> float:
+        """Cumulative modeled joules *not* spent thanks to prefix-KV
+        reuse (the prefill work a spliced prefix replaced).  Telemetry
+        diffs this per step into the avoided-energy counters, exactly as
+        it does the phase joules."""
+        return 0.0
+
+    def prefix_hit_count(self) -> int:
+        """Admissions that spliced a cached prefix (telemetry diffs it)."""
+        return 0
 
     # -- fault-tolerance hooks -------------------------------------------------
 
@@ -149,6 +165,11 @@ class ModelEngine(BaseEngine):
         self._jit_chunk_step = None
         self.prefill_chunk = 1
         self.set_prefill_chunk(prefill_chunk)
+        # cross-query prefix-KV reuse (repro.cache): attached by the
+        # scheduler's _configure_engine; None = recompute every prompt
+        self.prefix_cache = None
+        self._avoided_joules = 0.0
+        self._prefix_hits = 0
 
     def set_prefill_chunk(self, n: int) -> None:
         """Set the prompt tokens consumed per prefill tick and (re)build
@@ -174,6 +195,48 @@ class ModelEngine(BaseEngine):
 
         self._jit_chunk_step = jax.jit(_chunk_step, donate_argnums=(1,))
 
+    def set_prefix_cache(self, cache) -> None:
+        """Attach (or detach, with None) a prefix-KV cache.  Only layouts
+        whose decode cache can take a spliced slab participate — the same
+        full-depth positional-KV gate as chunked prefill; ring-buffer and
+        recurrent layouts silently keep recomputing their prompts."""
+        if cache is not None and not (api.supports_chunked_prefill(self.cfg)
+                                      and "k" in self.cache):
+            cache = None
+        self.prefix_cache = cache
+
+    def cumulative_joules_avoided(self) -> float:
+        return self._avoided_joules
+
+    def prefix_hit_count(self) -> int:
+        return self._prefix_hits
+
+    def _prefill_joules(self, n_tokens: int, kv_start: int = 0) -> float:
+        """Modeled joules the engine would spend prefilling ``n_tokens``
+        prompt tokens starting at cache offset ``kv_start`` at its current
+        chunk setting (mirrors ``_meter_step``'s charging rule: slabs > 1
+        token cost ``prefill_chunk_cost``, single tokens
+        ``decode_step_cost``).  With kv_start=0 this is the exact work a
+        spliced prefix of that length avoids; with kv_start=p it is the
+        work the uncached suffix still costs."""
+        C = max(self.prefill_chunk, 1)
+        joules, kv = 0.0, kv_start
+        end = kv_start + n_tokens
+        while kv < end:
+            n = min(C, end - kv)
+            if n > 1:
+                f, b = prefill_chunk_cost(self.cost_params, n, kv)
+            else:
+                f, b = decode_step_cost(self.cost_params, max(kv + n, 1))
+            joules += energy_joules(roofline(f, b, 0.0, self.energy.chips))
+            kv += n
+        return joules
+
+    def estimate_prefill_wh(self, n_tokens: int) -> float:
+        """Expected Wh saved by an ``n_tokens`` prefix hit (router-discount
+        and governor-credit units)."""
+        return self._prefill_joules(n_tokens) / JOULES_PER_WH
+
     # -- queueing ----------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
@@ -196,6 +259,27 @@ class ModelEngine(BaseEngine):
                 self.slots[i] = req
                 # reset the slot's cache length so it starts fresh
                 self.cache["length"] = self.cache["length"].at[i].set(0)
+                if self.prefix_cache is not None:
+                    self._splice_prefix(i, req)
+
+    def _splice_prefix(self, slot: int, req: Request) -> None:
+        """Reuse the longest cached KV prefix for a newly admitted prompt.
+
+        Keeps >= 1 prompt token to feed (the final token's forward pass
+        produces the first-generation logits), so the cap is
+        ``len(prompt) - 1``.  The splice sets the slot length to the
+        reused depth; prefill then continues from that offset, and the
+        avoided prefill work is credited to the engine's avoided-joules
+        ledger (telemetry turns it into ``kind="prefix"`` counters)."""
+        p, k_blk, v_blk = self.prefix_cache.match(
+            req.prompt_tokens, max_tokens=len(req.prompt_tokens) - 1)
+        if p <= 0:
+            return
+        self.cache = api.splice_prefix(self.cache, slot, k_blk, v_blk)
+        req.n_prompt_fed = p
+        req.prefix_reused = p
+        self._prefix_hits += 1
+        self._avoided_joules += self._prefill_joules(p)
 
     # -- the continuous-batching step ---------------------------------------------
 
@@ -332,12 +416,13 @@ class ModelEngine(BaseEngine):
 
     def _finish(self, slot: int) -> Response:
         req = self.slots[slot]
+        self._capture_prefix(slot, req)
         self.slots[slot] = None
         req.state = RequestState.DONE
         req.finish_s = time.monotonic()
         out = [t for t in req.generated if t != req.eos_id]
-        energy_wh = self.energy.measure_query(
-            self.cost_params, len(req.prompt_tokens), len(out))
+        energy_wh = self._query_wh(len(req.prompt_tokens),
+                                   req.prefix_reused, len(out))
         ttft_ms = ((req.first_token_s - req.submit_s) * 1e3
                    if req.first_token_s else 0.0)
         return Response(
@@ -346,7 +431,48 @@ class ModelEngine(BaseEngine):
             queue_ms=(req.start_s - req.submit_s) * 1e3,
             energy_wh=energy_wh, input_tokens=len(req.prompt_tokens),
             output_tokens=len(out), hedged_winner=req.hedged,
-            ttft_ms=ttft_ms)
+            ttft_ms=ttft_ms, prefix_reused=req.prefix_reused)
+
+    def _query_wh(self, n_prompt: int, reused: int, n_out: int) -> float:
+        """Per-query Wh of record.  Cold queries keep ``measure_query``
+        exactly.  With a spliced prefix, the prefill term covers only the
+        uncached suffix (charged at its true cache offsets) while decode
+        is still charged at *full* context depth — prefix reuse avoids
+        prefill work, never decode work (every decode step attends over
+        the whole cache).  The bandit feedback and the governor's bucket
+        drain both see this true spend."""
+        if reused <= 0:
+            return self.energy.measure_query(self.cost_params,
+                                             n_prompt, n_out)
+        joules = self._prefill_joules(max(n_prompt - reused, 1),
+                                      kv_start=reused)
+        mid_kv = n_prompt + max(n_out, 1) // 2
+        f, b = decode_step_cost(self.cost_params, mid_kv)
+        joules += max(n_out, 0) * energy_joules(
+            roofline(f, b, 0.0, self.energy.chips))
+        # keep the monitor's totals coherent with measure_query's
+        self.energy.total_joules += joules
+        self.energy.n_queries += 1
+        return joules / JOULES_PER_WH
+
+    def _capture_prefix(self, slot: int, req: Request) -> None:
+        """Register a finished prompt's KV with the prefix cache.  The
+        prompt region [0, n_prompt) of the slot cache is still intact at
+        finish time (decode appends strictly after it), so the capture is
+        one device→host copy; whole blocks only (tail rounding lives in
+        ``PrefixCache.insert``)."""
+        n_p = len(req.prompt_tokens)
+        if (self.prefix_cache is None
+                or n_p < self.prefix_cache.block_tokens
+                or req.n_prompt_fed < n_p
+                or n_p > self.max_len - 1):
+            # the last guard: a prompt that overflowed the slot cache has
+            # KV positions >= max_len that were never written — nothing
+            # trustworthy to capture
+            return
+        k = np.asarray(self.cache["k"][:, slot, :n_p])
+        v = np.asarray(self.cache["v"][:, slot, :n_p])
+        self.prefix_cache.insert(req.prompt_tokens, k, v)
 
     def restart(self) -> List[Request]:
         inflight = [r for r in self.slots if r is not None] + self.queue
@@ -355,6 +481,7 @@ class ModelEngine(BaseEngine):
             r.slot = -1
             r.generated = []
             r.n_prompt_fed = 0
+            r.prefix_reused = 0          # re-splices on re-admission
             r.first_token_s = 0.0
         self.slots = [None] * self.max_batch
         self.queue = []

@@ -41,6 +41,10 @@ class Request:
     slot: int = -1
     generated: List[int] = dataclasses.field(default_factory=list)
     n_prompt_fed: int = 0
+    prefix_reused: int = 0   # prompt tokens spliced from the prefix-KV cache
+    # (task_label, cluster, embedding) computed once by the scheduler's
+    # cache probe; reused at completion for the semantic insert
+    cache_features: Optional[tuple] = None
     submit_s: float = dataclasses.field(default_factory=time.monotonic)
     start_s: float = 0.0
     first_token_s: float = 0.0
@@ -88,3 +92,4 @@ class Response:
     output_tokens: int
     hedged_winner: bool = False
     ttft_ms: float = 0.0     # time to first generated token (0 = unknown)
+    prefix_reused: int = 0   # prompt tokens served from the prefix-KV cache

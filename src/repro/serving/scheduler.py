@@ -3,6 +3,10 @@
 Implements the paper's online deployment (§4.4) with the production
 concerns of DESIGN §5:
 
+  * caching: GreenCache (repro.cache) is consulted before routing — a
+    semantic hit answers the query with zero engine work, and prefix-KV
+    hit lengths become expected-energy discounts in the routing decision
+    (only the queries that need compute are routed);
   * routing: every query goes through GreenServRouter (context → feasible →
     LinUCB), execution through the selected model's engine, and the
     measured (accuracy, energy, latency) closes the bandit loop;
@@ -23,10 +27,12 @@ import time
 from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence
 
 if TYPE_CHECKING:  # pragma: no cover - annotation only
+    from repro.cache import GreenCache
     from repro.telemetry.hub import Telemetry
 
 import numpy as np
 
+from repro.cache.semantic import SemanticEntry
 from repro.core.pool import ModelPool
 from repro.core.router import GreenServRouter
 from repro.core.types import Feedback, ModelProfile, Query, RouterConfig
@@ -37,10 +43,13 @@ from repro.serving.request import Request, RequestState, Response
 class PoolServer:
     """The GreenServ scheduler: routes queries, steps engines, closes the
     bandit loop.  ``hedge_after_steps`` is measured in scheduler steps
-    spent QUEUED; ``heartbeat_timeout_s`` in wall-clock seconds;
-    ``prefill_chunk`` (prompt tokens per engine prefill tick) is pushed
-    into every engine at construction and again on ``add_engine``, so a
-    server-level setting governs the whole pool."""
+    spent QUEUED; ``heartbeat_timeout_s`` in wall-clock seconds.  Every
+    pool-level serving setting — ``prefill_chunk`` (prompt tokens per
+    engine prefill tick), the ``cache`` handles (GreenCache prefix-KV /
+    semantic reuse, consulted before routing), telemetry pre-binding — is
+    applied through one ``_configure_engine`` choke point at construction
+    and again on ``add_engine``, so a server-level setting governs the
+    whole pool including late joiners."""
 
     def __init__(self, router: GreenServRouter,
                  engines: Dict[str, BaseEngine],
@@ -49,7 +58,8 @@ class PoolServer:
                  heartbeat_timeout_s: float = 30.0,
                  accuracy_fn: Optional[Callable] = None,
                  telemetry: Optional["Telemetry"] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 cache: Optional["GreenCache"] = None):
         names = router.pool.names
         missing = [n for n in names if n not in engines]
         if missing:
@@ -63,27 +73,44 @@ class PoolServer:
         self.accuracy_fn = accuracy_fn
         self.telemetry = telemetry
         self.prefill_chunk = prefill_chunk
-        if prefill_chunk is not None:
-            for eng in engines.values():
-                eng.set_prefill_chunk(prefill_chunk)
+        self.cache = cache if (cache is None or cache.mode != "off") else None
+        if self.cache is not None:
+            # guard features must live in the router's embedding space
+            self.cache.bind_context(router.context)
+        for name, eng in engines.items():
+            self._configure_engine(name, eng, initial=True)
         if telemetry is not None and telemetry.governor is not None:
             telemetry.governor.attach(router)
         self.inflight: Dict[int, Request] = {}
         self.hedges: Dict[int, Request] = {}
         self.responses: Dict[int, Response] = {}
         self.wait_steps: Dict[int, int] = {}
-        self.stats = {"hedges": 0, "restarts": 0, "completed": 0}
+        self.stats = {"hedges": 0, "restarts": 0, "completed": 0,
+                      "cache_hits": 0}
         # feedback for completions collected during the current step(); the
         # router is updated once per step via feedback_batch
         self._fb_buffer: List[Feedback] = []
 
     # -- pool growth (paper §6.3.4) ---------------------------------------------
 
-    def add_engine(self, profile: ModelProfile, engine: BaseEngine) -> None:
-        """Zero-calibration model addition: new engine + fresh bandit arm.
-        The server's ``prefill_chunk`` setting applies to late joiners too."""
+    def _configure_engine(self, name: str, engine: BaseEngine,
+                          initial: bool = False) -> None:
+        """Apply *every* pool-level serving setting to one engine — the
+        single choke point used at construction and by ``add_engine``, so
+        a late joiner can never silently miss a knob (prefill chunking,
+        its prefix-KV cache handle, telemetry pre-binding)."""
         if self.prefill_chunk is not None:
             engine.set_prefill_chunk(self.prefill_chunk)
+        if self.cache is not None:
+            engine.set_prefix_cache(self.cache.prefix_for(name))
+        if self.telemetry is not None:
+            self.telemetry.on_engine_added(name, engine, initial=initial)
+
+    def add_engine(self, profile: ModelProfile, engine: BaseEngine) -> None:
+        """Zero-calibration model addition: new engine + fresh bandit arm.
+        Every server-level setting (``prefill_chunk``, cache handles,
+        telemetry hooks) applies to late joiners via _configure_engine."""
+        self._configure_engine(profile.name, engine)
         self.engines[profile.name] = engine
         self.router.pool.add(profile)   # fires the router's add-arm hook
 
@@ -94,10 +121,18 @@ class PoolServer:
         return self.submit_batch([query])[0]
 
     def submit_batch(self, queries: Sequence[Query]) -> List[Request]:
-        """Admit a batch: one ``route_batch`` call routes every query, then
-        each engine receives its slice in arrival order.  This is the
-        serving hot path — featurization and LinUCB scoring amortize over
-        the batch instead of paying per-query dispatch."""
+        """Admit a batch: cache consultation, then one ``route_batch`` call
+        routes every remaining query and each engine receives its slice in
+        arrival order.  This is the serving hot path — featurization and
+        LinUCB scoring amortize over the batch instead of paying per-query
+        dispatch.
+
+        GreenCache runs *before* routing: a semantic hit short-circuits
+        the query entirely (its Request comes back already DONE, the
+        cached Response is immediately available in ``responses``), and
+        per-(query, engine) prefix-KV hit lengths become expected-energy
+        discounts in the router's arm scores plus an in-flight savings
+        credit for the governor."""
         # routed models always come from the pool, so checking the
         # pool/engine invariant up front fails before ANY bookkeeping
         # (router pending entries included) — a half-registered batch
@@ -106,23 +141,110 @@ class PoolServer:
                    if n not in self.engines]
         if missing:
             raise KeyError(f"no engine for pool member(s): {missing}")
-        decisions = self.router.route_batch(queries)
-        reqs: List[Request] = []
+        req_by_uid: Dict[int, Request] = {}
+        routable: List[Query] = []
+        miss_features: List[Optional[tuple]] = []
+        for query in queries:
+            hit, feats = self._try_semantic(query)
+            if hit is not None:
+                req_by_uid[query.uid] = hit
+            else:
+                routable.append(query)
+                miss_features.append(feats)
+        tokens = [self.tokenizer(q.text) for q in routable]
+        discounts = self._prefix_discounts(routable, tokens)
+        # forward the cache probe's feature work (one embed + classify per
+        # query) into routing instead of re-deriving it there
+        embs = labels = None
+        if routable and miss_features[0] is not None:
+            labels = np.asarray([f[0] for f in miss_features], np.int64)
+            embs = np.stack([f[2] for f in miss_features])
+        decisions = self.router.route_batch(
+            routable, energy_discounts_wh=discounts,
+            embeddings=embs, task_labels=labels)
         per_engine: Dict[str, List[Request]] = {}
-        for query, decision in zip(queries, decisions):
-            req = Request(query=query,
-                          prompt_tokens=self.tokenizer(query.text),
-                          max_new_tokens=query.max_new_tokens)
+        expected_savings_wh = 0.0
+        for i, (query, decision) in enumerate(zip(routable, decisions)):
+            req = Request(query=query, prompt_tokens=tokens[i],
+                          max_new_tokens=query.max_new_tokens,
+                          cache_features=miss_features[i])
             per_engine.setdefault(decision.model_name, []).append(req)
             self.inflight[query.uid] = req
             self.wait_steps[query.uid] = 0
-            reqs.append(req)
+            req_by_uid[query.uid] = req
+            if discounts is not None:
+                expected_savings_wh += float(
+                    discounts[i, decision.model_index])
         for name, batch in per_engine.items():
             self.engines[name].submit_many(batch)
         if self.telemetry is not None:
             self.telemetry.on_admit(
-                len(reqs), sum(e.pending for e in self.engines.values()))
-        return reqs
+                len(routable), sum(e.pending for e in self.engines.values()),
+                expected_savings_wh=expected_savings_wh)
+        return [req_by_uid[q.uid] for q in queries]
+
+    # -- GreenCache consultation (docs/CACHING.md) -------------------------------
+
+    def _try_semantic(self, query: Query
+                      ) -> tuple:
+        """(already-DONE Request | None, probe features | None).
+
+        A hit synthesizes the cached completion as this query's Response
+        (zero engine work, zero routing) and returns an already-DONE
+        Request; the avoided energy — the cached completion's measured Wh
+        — is credited via ``Telemetry.on_cache_hit("semantic", …)``.
+        Cached queries never touch router state (no k-means update, no
+        bandit pull): they are invisible to the learning loop, exactly
+        like traffic that never arrived.  On a miss the computed
+        (task, cluster, embedding) features come back so the query is
+        embedded exactly once per lifecycle — routing and the
+        completion-time insert both reuse them."""
+        if self.cache is None or not self.cache.semantic_enabled:
+            return None, None
+        feats = self.cache.features(query.text)
+        task, cluster, emb = feats
+        entry = self.cache.semantic.lookup(emb, task, cluster)
+        if entry is None:
+            return None, feats
+        resp = Response(
+            uid=query.uid, model_name=entry.model_name,
+            tokens=list(entry.tokens), text=entry.text_out,
+            latency_ms=0.0, queue_ms=0.0, energy_wh=0.0,
+            input_tokens=entry.input_tokens,
+            output_tokens=entry.output_tokens, ttft_ms=0.0)
+        resp.accuracy = entry.accuracy  # type: ignore[attr-defined]
+        self.responses[query.uid] = resp
+        self.stats["cache_hits"] += 1
+        if self.telemetry is not None:
+            self.telemetry.on_cache_hit("semantic", entry.energy_wh,
+                                        model=entry.model_name)
+        req = Request(query=query, prompt_tokens=[],
+                      max_new_tokens=query.max_new_tokens,
+                      state=RequestState.DONE,
+                      model_name=entry.model_name)
+        return req, feats
+
+    def _prefix_discounts(self, queries: Sequence[Query],
+                          tokens: Sequence[List[int]]
+                          ) -> Optional[np.ndarray]:
+        """(Q, n_models) expected Wh each engine's prefix cache would save
+        per query — the router adds λ·ΔWh/scale to those arms' scores.
+        Probes use ``peek_len`` (no LRU touch): an unrouted probe must not
+        keep blocks warm."""
+        if self.cache is None or not self.cache.prefix_enabled or not queries:
+            return None
+        names = self.router.pool.names
+        disc = np.zeros((len(queries), len(names)), np.float64)
+        for j, name in enumerate(names):
+            eng = self.engines[name]
+            pc = getattr(eng, "prefix_cache", None)
+            if pc is None:
+                continue
+            for i, toks in enumerate(tokens):
+                p = pc.peek_len(toks, max_tokens=len(toks) - 1)
+                if p > 0:
+                    disc[i, j] = eng.estimate_prefill_wh(p)
+        return disc if disc.any() else None
 
     # -- hedged (straggler-mitigating) dispatch ------------------------------------
 
@@ -233,6 +355,18 @@ class PoolServer:
         self.hedges.pop(primary_uid, None)
         self.wait_steps.pop(primary_uid, None)
         self.stats["completed"] += 1
+        if self.cache is not None and self.cache.semantic_enabled:
+            # the admission-time probe features (one embed per query);
+            # fall back to a fresh probe only if they were never stashed
+            # (e.g. the cache was attached mid-flight)
+            task, cluster, emb = (primary.cache_features
+                                  or self.cache.features(primary.query.text))
+            self.cache.semantic.insert(emb, SemanticEntry(
+                text=primary.query.text, task_label=task, cluster=cluster,
+                model_name=resp.model_name, tokens=list(resp.tokens),
+                text_out=resp.text, energy_wh=resp.energy_wh,
+                accuracy=float(accuracy), input_tokens=resp.input_tokens,
+                output_tokens=resp.output_tokens))
         if self.telemetry is not None:
             self.telemetry.on_completion(resp, float(accuracy))
             if hedged_pair:

@@ -112,6 +112,15 @@ class EnergyBudgetGovernor:
         # decode, fed per step by Telemetry.on_step from the engines'
         # phase-tagged joule counters
         self.phase_wh = {"prefill": 0.0, "decode": 0.0}
+        # GreenCache credit ledger (Wh): energy the cache *avoided*
+        # spending (prefix-KV splices, semantic answers).  Avoided energy
+        # earns bucket credit — work the budget no longer has to fund —
+        # but never counts as negative spend against the hard cap.
+        self.avoided_wh = {"prefix": 0.0, "semantic": 0.0}
+        # expected Wh savings of queries routed-but-not-completed (prefix
+        # hits known at admission); discounts the in-flight commitment so
+        # a warm-cache burst doesn't tighten λ for energy it won't spend
+        self.inflight_savings_wh = 0.0
 
     def attach(self, router) -> None:
         self.router = router
@@ -127,12 +136,33 @@ class EnergyBudgetGovernor:
         # dirty grid → each wall-clock unit earns proportionally less credit
         return 1.0 / max(self.carbon_fn(t_s), 1e-6)
 
-    def on_admission(self, n: int, t_s: float = 0.0) -> None:
+    def on_admission(self, n: int, t_s: float = 0.0,
+                     expected_savings_wh: float = 0.0) -> None:
         """Note routed-but-not-yet-completed queries.  Routing commits
         energy long before completion meters it; the projection charges
         each in-flight query its expected (EWMA) cost so admission bursts
-        tighten λ *before* their bill arrives, not a pipeline-delay later."""
+        tighten λ *before* their bill arrives, not a pipeline-delay later.
+
+        ``expected_savings_wh``: Wh the batch is expected *not* to spend
+        (prefix-KV hits known at routing time); it discounts the in-flight
+        commitment until the corresponding completions retire it."""
         self.admitted += n
+        self.inflight_savings_wh += max(expected_savings_wh, 0.0)
+        if self.control_on_completion:
+            self._control(t_s)
+
+    def on_avoided_energy(self, energy_wh: float, kind: str,
+                          t_s: float = 0.0) -> None:
+        """Credit energy a cache hit avoided spending (``kind`` is
+        ``"prefix"`` or ``"semantic"``).  Ledger entry + bucket refill
+        credit: the avoided Wh is headroom the budget gets back, so
+        pressure relaxes in the same step — the closed-loop face of
+        "the cheapest token is the one never computed".  Cumulative spend
+        (the hard cap) is untouched: avoided energy is not negative
+        consumption."""
+        wh = max(energy_wh, 0.0)
+        self.avoided_wh[kind] = self.avoided_wh.get(kind, 0.0) + wh
+        self.bucket_wh = min(self.bucket_wh + wh, self.capacity_wh)
         if self.control_on_completion:
             self._control(t_s)
 
@@ -158,6 +188,11 @@ class EnergyBudgetGovernor:
     def on_completion(self, energy_wh: float, t_s: float = 0.0) -> None:
         """Drain the bucket by a completion's measured energy; in query-
         horizon mode also earn this completion's refill credit."""
+        # the completing query carries away its (average) share of the
+        # expected in-flight cache savings — realized savings now show up
+        # in the measured energy itself
+        inflight = max(self.admitted - self.completed, 1)
+        self.inflight_savings_wh *= 1.0 - 1.0 / inflight
         self.cumulative_wh += energy_wh
         self.completed += 1
         self.bucket_wh -= energy_wh
@@ -189,8 +224,12 @@ class EnergyBudgetGovernor:
             if self.wh_per_query_ewma is None or self.completed == 0:
                 return None
             inflight = max(self.admitted - self.completed, 0)
-            committed = (self.cumulative_wh
-                         + inflight * self.wh_per_query_ewma)
+            expected_inflight_wh = inflight * self.wh_per_query_ewma
+            # prefix-KV hits known at admission won't spend their full
+            # EWMA cost; the discount never exceeds the commitment itself
+            expected_inflight_wh -= min(self.inflight_savings_wh,
+                                        expected_inflight_wh)
+            committed = self.cumulative_wh + expected_inflight_wh
             remaining_q = self.horizon_queries - max(self.admitted,
                                                      self.completed)
             if remaining_q <= 0:
@@ -278,4 +317,6 @@ class EnergyBudgetGovernor:
             "exhausted": self.exhausted,
             "prefill_wh": self.phase_wh["prefill"],
             "decode_wh": self.phase_wh["decode"],
+            "avoided_prefix_wh": self.avoided_wh["prefix"],
+            "avoided_semantic_wh": self.avoided_wh["semantic"],
         }

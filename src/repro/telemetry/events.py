@@ -17,12 +17,15 @@ COMPLETE = "complete"
 HEDGE = "hedge"
 RESTART = "restart"
 LAMBDA = "lambda"           # governor changed the router's λ
+CACHE_HIT = "cache_hit"     # GreenCache answered/shortened a query
+ENGINE_ADDED = "engine_added"   # pool grew at runtime (add_engine)
 
 
 class Event(NamedTuple):
     """One discrete serving occurrence: ``kind`` (ADMIT/COMPLETE/HEDGE/
-    RESTART/LAMBDA), ``t_s`` the caller-clock timestamp in seconds, and a
-    flat ``payload`` (energies in Wh, latencies in ms, counts unitless)."""
+    RESTART/LAMBDA/CACHE_HIT/ENGINE_ADDED), ``t_s`` the caller-clock
+    timestamp in seconds, and a flat ``payload`` (energies in Wh,
+    latencies in ms, counts unitless)."""
 
     kind: str
     t_s: float

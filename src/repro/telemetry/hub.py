@@ -17,6 +17,8 @@ Metric conventions (exported names):
   greenserv_energy_per_token_mwh{model=}
   greenserv_queue_depth{engine=} · greenserv_power_watts{source=}
   greenserv_energy_joules_total{phase=prefill|decode}
+  greenserv_energy_joules_avoided_total{kind=prefix|semantic}
+  greenserv_cache_hits_total{kind=prefix|semantic}
   greenserv_lambda · greenserv_budget_pressure
 
 Energy is phase-split: engines report cumulative joules tagged prefill
@@ -33,8 +35,8 @@ from repro.telemetry import events as ev
 from repro.telemetry.budget import EnergyBudgetGovernor
 from repro.telemetry.events import EventLog
 from repro.telemetry.metrics import Counter, Histogram, MetricsRegistry
-from repro.telemetry.power import (PHASE_DECODE, PHASE_PREFILL, POOL,
-                                   PowerTrace)
+from repro.telemetry.power import (AVOIDED, PHASE_DECODE, PHASE_PREFILL,
+                                   POOL, PowerTrace)
 from repro.core.energy import JOULES_PER_WH
 
 
@@ -86,15 +88,64 @@ class Telemetry:
                                {"source": "prefill"}),
             "decode": r.gauge("greenserv_power_watts", {"source": "decode"})}
         self._phase_last: Dict[str, float] = {"prefill": 0.0, "decode": 0.0}
+        # GreenCache avoided energy: joules never spent thanks to
+        # prefix-KV reuse (engines meter it, diffed per step like phase
+        # joules) and semantic answers (scheduler reports per hit)
+        self._avoided_energy = {
+            kind: r.counter("greenserv_energy_joules_avoided_total",
+                            {"kind": kind},
+                            help="modeled joules avoided by GreenCache")
+            for kind in ("prefix", "semantic")}
+        self._cache_hits = {
+            kind: r.counter("greenserv_cache_hits_total", {"kind": kind},
+                            help="GreenCache hits by layer")
+            for kind in ("prefix", "semantic")}
+        self._prefix_avoided_last = 0.0
+        self._prefix_hits_last = 0
+        self._avoided_cum_joules = 0.0
 
     # -- scheduler hooks ----------------------------------------------------
 
-    def on_admit(self, n: int, queue_depth: int) -> None:
+    def on_admit(self, n: int, queue_depth: int,
+                 expected_savings_wh: float = 0.0) -> None:
         t = self.clock()
         self._admitted.inc(n)
         self.events.emit(ev.ADMIT, t, n=n, queue_depth=queue_depth)
         if self.governor is not None:
-            self.governor.on_admission(n, t)
+            self.governor.on_admission(
+                n, t, expected_savings_wh=expected_savings_wh)
+
+    def on_cache_hit(self, kind: str, avoided_wh: float,
+                     model: str = "") -> None:
+        """A GreenCache layer short-circuited work: ``kind="semantic"``
+        (whole query answered from cache — the scheduler calls this per
+        hit) with the original completion's Wh as the avoided energy.
+        Prefix-KV hits flow through the engines' avoided-joule meters and
+        are diffed in ``on_step`` instead — call this only for hits no
+        engine meters."""
+        t = self.clock()
+        self._cache_hits[kind].inc()
+        joules = max(avoided_wh, 0.0) * JOULES_PER_WH
+        self._avoided_energy[kind].inc(joules)
+        self._avoided_cum_joules += joules
+        self.events.emit(ev.CACHE_HIT, t, layer=kind,
+                         avoided_wh=avoided_wh, model=model)
+        if self.governor is not None:
+            self.governor.on_avoided_energy(avoided_wh, kind, t)
+
+    def on_engine_added(self, name: str, engine,
+                        initial: bool = False) -> None:
+        """Pool-membership hook (``PoolServer._configure_engine``):
+        pre-bind the engine's queue/power gauges so a late joiner is
+        visible in the export from its first step; runtime additions
+        (``initial=False``) also log a pool-growth event."""
+        if name not in self._queue_gauges:
+            self._queue_gauges[name] = self.registry.gauge(
+                "greenserv_queue_depth", {"engine": name})
+            self._power_gauges[name] = self.registry.gauge(
+                "greenserv_power_watts", {"source": name})
+        if not initial:
+            self.events.emit(ev.ENGINE_ADDED, self.clock(), engine=name)
 
     def on_completion(self, resp, accuracy: float) -> None:
         t = self.clock()
@@ -158,12 +209,19 @@ class Telemetry:
         t = self.clock()
         joules = {}
         phase_tot = {"prefill": 0.0, "decode": 0.0}
+        prefix_avoided = 0.0
+        prefix_hits = 0
         for name, eng in engines.items():
             phases = eng.cumulative_joules_by_phase()
             joules[name] = phases.get("prefill", 0.0) + phases.get(
                 "decode", 0.0)
             phase_tot["prefill"] += phases.get("prefill", 0.0)
             phase_tot["decode"] += phases.get("decode", 0.0)
+            # getattr: duck-typed engines (tests, adapters) may predate
+            # the avoided-energy surface
+            prefix_avoided += getattr(eng, "cumulative_joules_avoided",
+                                      lambda: 0.0)()
+            prefix_hits += getattr(eng, "prefix_hit_count", lambda: 0)()
             qg = self._queue_gauges.get(name)
             if qg is None:
                 qg = self._queue_gauges[name] = self.registry.gauge(
@@ -172,6 +230,21 @@ class Telemetry:
                     "greenserv_power_watts", {"source": name})
             qg.set(eng.pending)
         self.power.sample_all(t, joules, phase_joules=phase_tot)
+        # prefix-KV avoided energy is metered inside the engines; diff the
+        # cumulative counters once per step (exactly like phase joules)
+        d_avoided = max(prefix_avoided - self._prefix_avoided_last, 0.0)
+        if d_avoided:
+            self._avoided_energy["prefix"].inc(d_avoided)
+            self._avoided_cum_joules += d_avoided
+            if self.governor is not None:
+                self.governor.on_avoided_energy(
+                    d_avoided / JOULES_PER_WH, "prefix", t)
+        self._prefix_avoided_last = prefix_avoided
+        d_hits = prefix_hits - self._prefix_hits_last
+        if d_hits > 0:
+            self._cache_hits["prefix"].inc(d_hits)
+        self._prefix_hits_last = prefix_hits
+        self.power.sample(AVOIDED, t, self._avoided_cum_joules)
         deltas = {}
         for ph, cur in phase_tot.items():
             deltas[ph] = max(cur - self._phase_last[ph], 0.0)
@@ -230,6 +303,15 @@ class Telemetry:
             lines.append(
                 f"  phases    prefill {pre_wh:.4f} Wh ({frac:5.1%})   "
                 f"decode {dec_wh:.4f} Wh")
+        if self._avoided_cum_joules > 0.0:
+            mwh = 1e3 / JOULES_PER_WH
+            pj = self._avoided_energy["prefix"].value
+            sj = self._avoided_energy["semantic"].value
+            lines.append(
+                f"  cache     avoided {self._avoided_cum_joules * mwh:.4g} mWh "
+                f"(prefix {pj * mwh:.4g} / semantic {sj * mwh:.4g})   "
+                f"hits prefix {int(self._cache_hits['prefix'].value)} / "
+                f"semantic {int(self._cache_hits['semantic'].value)}")
         for model in sorted(self._energy_per_tok):
             h = self._energy_per_tok[model]
             if h.count:
@@ -243,4 +325,10 @@ class Telemetry:
                 f"{g['budget_wh']:.3f} Wh spent   pressure "
                 f"{g['pressure']:.2f}   λ now {g['lambda']:.3f}   "
                 f"({g['lambda_changes']} adjustments)")
+            avoided = g["avoided_prefix_wh"] + g["avoided_semantic_wh"]
+            if avoided > 0.0:
+                lines.append(
+                    f"            avoided {avoided * 1e3:.4g} mWh credited "
+                    f"(prefix {g['avoided_prefix_wh'] * 1e3:.4g} / semantic "
+                    f"{g['avoided_semantic_wh'] * 1e3:.4g})")
         return "\n".join(lines)

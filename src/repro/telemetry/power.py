@@ -12,7 +12,10 @@ rates in watts, cumulative counters in joules (divide by 3600 for Wh).
 
 Besides per-engine series and the pool aggregate, two reserved phase
 series (``PHASE_PREFILL`` / ``PHASE_DECODE``) split the pool's burn by
-serving phase when engines report phase-tagged joules.
+serving phase when engines report phase-tagged joules, and a reserved
+``AVOIDED`` series tracks the GreenCache counterfactual — joules the pool
+*would* have burned without prefix/semantic reuse ("avoided watts" reads
+like any other source).
 """
 from __future__ import annotations
 
@@ -24,7 +27,8 @@ from repro.core.energy import JOULES_PER_WH
 POOL = "__pool__"           # reserved source name for the pool-wide series
 PHASE_PREFILL = "__prefill__"   # pool-wide prefill-phase joules series
 PHASE_DECODE = "__decode__"     # pool-wide decode-phase joules series
-_RESERVED = (POOL, PHASE_PREFILL, PHASE_DECODE)
+AVOIDED = "__avoided__"         # pool-wide GreenCache avoided-joules series
+_RESERVED = (POOL, PHASE_PREFILL, PHASE_DECODE, AVOIDED)
 PHASE_SOURCES = {"prefill": PHASE_PREFILL, "decode": PHASE_DECODE}
 
 

@@ -13,6 +13,13 @@ import pytest
 from repro.core.types import RouterConfig
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "cache: GreenCache prefix-KV / semantic caching tests "
+        "(run the subset with -m cache)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

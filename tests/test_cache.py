@@ -1,0 +1,370 @@
+"""GreenCache correctness: spliced-prefix equivalence, deterministic
+eviction, semantic guards, and scheduler integration.
+
+The load-bearing property is splice equivalence: decoding after
+``api.splice_prefix`` + suffix chunked prefill must match a cold full
+prefill bit-for-bit up to fp tolerance, across dense / MoE / enc-dec
+layouts, chunk sizes, prefix lengths, and ragged batch slots — a cache
+hit may never change what the model says, only what it costs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import GreenCache, KVBlockPool, SemanticCache, SemanticEntry
+from repro.cache.prefix import PrefixCache
+from repro.configs import get_config
+from repro.core.pool import ModelPool
+from repro.core.router import GreenServRouter
+from repro.core.types import ModelProfile, Query, RouterConfig
+from repro.data import tokenizer as tok
+from repro.models import api
+from repro.serving import ModelEngine, PoolServer, Request
+from repro.telemetry import EnergyBudgetGovernor, Telemetry, to_prometheus
+
+pytestmark = pytest.mark.cache
+
+MAX_LEN = 48
+PROMPT = list(range(3, 17))       # 14 tokens
+RTOL = ATOL = 3e-4                # fp32, batched-vs-stepped matmuls
+
+
+def _cfg(arch):
+    return get_config(arch, smoke=True, vocab_size=256, dtype="float32",
+                      kv_update="where")
+
+
+def _prefill(params, cfg, prompts, batch, chunk, caches=None, fed0=None):
+    """Chunk-prefill per-slot prompts (optionally resuming mid-prompt from
+    a spliced cache); returns (per-slot last logits, cache)."""
+    cache = caches if caches is not None else api.init_cache(cfg, batch,
+                                                             MAX_LEN)
+    fed = list(fed0) if fed0 is not None else [0] * batch
+    last = [None] * batch
+    while any(fed[b] < len(p) for b, p in enumerate(prompts)):
+        toks = np.zeros((batch, chunk), np.int32)
+        n_active = np.zeros((batch,), np.int32)
+        for b, p in enumerate(prompts):
+            n = min(chunk, len(p) - fed[b])
+            if n > 0:
+                toks[b, :n] = p[fed[b]:fed[b] + n]
+                n_active[b] = n
+        logits, cache = api.prefill_chunk(params, jnp.asarray(toks), cache,
+                                          cfg, jnp.asarray(n_active))
+        for b, p in enumerate(prompts):
+            n = int(n_active[b])
+            if n and fed[b] + n == len(p):
+                last[b] = np.asarray(logits[b, n - 1])
+            fed[b] += n
+    return last, cache
+
+
+# ---------------------------------------------------------------------------
+# Splice equivalence (property-style: layouts × chunk sizes × prefix lens)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "qwen2-moe-a2.7b",
+                                  "whisper-medium"])
+@pytest.mark.parametrize("chunk,prefix_len", [
+    (2, 4), (2, 13), (5, 8), (8, 3), (8, 13), (14, 7),
+])
+def test_spliced_prefix_matches_cold_prefill(arch, chunk, prefix_len):
+    if arch == "qwen2-moe-a2.7b" and chunk > 8:
+        # expert capacity is computed per dispatch group, so a cold
+        # 14-token group and a warm 7-token group can drop different
+        # tokens — the standing MoE chunking caveat (docs/SERVING.md),
+        # not a cache defect; the suite pins MoE chunks at <= 8
+        pytest.skip("MoE capacity caveat: chunk > 8 not exact")
+    """Warm decode == cold decode: splice the first ``prefix_len`` tokens'
+    KV (captured from a completed cold run) into a fresh slot, prefill
+    only the suffix, and require identical first-token logits and an
+    identical prompt-region cache."""
+    cfg = _cfg(arch)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    cold_logits, cold_cache = _prefill(params, cfg, [PROMPT], 1, chunk)
+    # the "cached blocks": the cold cache's KV for positions [0, prefix)
+    k_blk = np.asarray(cold_cache["k"][:, 0, :prefix_len])
+    v_blk = np.asarray(cold_cache["v"][:, 0, :prefix_len])
+    warm = api.init_cache(cfg, 1, MAX_LEN)
+    warm = api.splice_prefix(warm, 0, k_blk, v_blk)
+    assert int(warm["length"][0]) == prefix_len
+    warm_logits, warm_cache = _prefill(params, cfg, [PROMPT], 1, chunk,
+                                       caches=warm, fed0=[prefix_len])
+    np.testing.assert_allclose(warm_logits[0], cold_logits[0],
+                               rtol=RTOL, atol=ATOL)
+    n_p = len(PROMPT)
+    for leaf in ("k", "v"):
+        np.testing.assert_allclose(
+            np.asarray(warm_cache[leaf][:, 0, :n_p]),
+            np.asarray(cold_cache[leaf][:, 0, :n_p]), rtol=RTOL, atol=ATOL)
+    np.testing.assert_array_equal(np.asarray(warm_cache["length"]),
+                                  np.asarray(cold_cache["length"]))
+
+
+def test_spliced_prefix_ragged_batch_slots():
+    """A spliced slot and a cold slot share a batch: the splice must not
+    leak into the neighbour, and both must match their solo references."""
+    cfg = _cfg("granite-3-8b")
+    params = api.init_params(cfg, jax.random.PRNGKey(1))
+    short = list(range(40, 45))                       # 5 tokens, cold
+    cold_logits, cold_cache = _prefill(params, cfg, [PROMPT, short], 2, 4)
+    k_blk = np.asarray(cold_cache["k"][:, 0, :8])
+    v_blk = np.asarray(cold_cache["v"][:, 0, :8])
+    warm = api.init_cache(cfg, 2, MAX_LEN)
+    warm = api.splice_prefix(warm, 0, k_blk, v_blk)   # slot 0 only
+    warm_logits, warm_cache = _prefill(params, cfg, [PROMPT, short], 2, 4,
+                                       caches=warm, fed0=[8, 0])
+    for b in range(2):
+        np.testing.assert_allclose(warm_logits[b], cold_logits[b],
+                                   rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(warm_cache["k"]),
+                               np.asarray(cold_cache["k"]),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_engine_warm_generation_matches_cold():
+    """End-to-end through ModelEngine: the second serving of a prompt
+    splices whole blocks, decodes identical tokens, reaches its first
+    token in fewer engine steps, and banks avoided joules."""
+    cfg = get_config("granite-3-8b", smoke=True, vocab_size=tok.VOCAB_SIZE,
+                     dtype="float32")
+    eng = ModelEngine("granite", cfg, jax.random.PRNGKey(2), max_batch=2,
+                      max_len=64, prefill_chunk=4)
+    eng.set_prefix_cache(PrefixCache(max_blocks=32, block_tokens=8))
+    prompt = list(range(7, 27))                       # 20 tokens
+
+    def serve(uid):
+        req = Request(query=Query(uid=uid, text="x"),
+                      prompt_tokens=list(prompt), max_new_tokens=4)
+        eng.submit(req)
+        steps, out = 0, []
+        while not req.generated and steps < 80:
+            out += eng.step()
+            steps += 1
+        ttft_steps = steps
+        while not out and steps < 120:
+            out += eng.step()
+            steps += 1
+        return out[0], ttft_steps, req
+
+    cold, cold_ttft, _ = serve(0)
+    warm, warm_ttft, warm_req = serve(1)
+    assert cold.tokens == warm.tokens
+    assert warm_req.prefix_reused == 16               # 2 whole 8-token blocks
+    assert warm.prefix_reused == 16
+    assert warm_ttft < cold_ttft
+    assert eng.prefix_hit_count() == 1
+    assert eng.cumulative_joules_avoided() > 0.0
+    assert warm.energy_wh < cold.energy_wh            # true-spend accounting
+
+
+def test_engine_without_full_depth_cache_ignores_prefix_cache():
+    """Recurrent layouts can't take a splice: attach is a silent no-op
+    (same gate as chunked prefill)."""
+    cfg = get_config("rwkv6-1.6b", smoke=True, vocab_size=tok.VOCAB_SIZE)
+    eng = ModelEngine("rwkv", cfg, jax.random.PRNGKey(0), max_batch=1,
+                      max_len=32)
+    eng.set_prefix_cache(PrefixCache(max_blocks=4))
+    assert eng.prefix_cache is None
+
+
+# ---------------------------------------------------------------------------
+# Eviction: bounded, leaf-first, deterministic
+# ---------------------------------------------------------------------------
+
+
+def _fake_kv(n_tokens, tag=0.0):
+    k = np.full((2, n_tokens, 1, 4), tag, np.float32)
+    return k, k.copy()
+
+
+def test_lru_leaf_eviction_keeps_chains_contiguous():
+    pc = PrefixCache(max_blocks=3, block_tokens=4)
+    a = list(range(8))                  # 2 blocks
+    b = list(range(100, 104))           # 1 block
+    pc.insert(a, *_fake_kv(8))
+    pc.insert(b, *_fake_kv(4))
+    assert pc.stats()["blocks"] == 3
+    n, _ = pc.index.lookup(a)           # touch A's chain (B becomes LRU)
+    assert n == 8
+    c = list(range(200, 204))
+    pc.insert(c, *_fake_kv(4))          # full: must evict B's leaf, not A's
+    assert pc.peek_len(a) == 8          # A's chain survived intact
+    assert pc.peek_len(b) == 0
+    assert pc.peek_len(c) == 4
+    assert pc.pool.evictions == 1
+
+
+def test_eviction_is_deterministic_under_seeded_workload():
+    def run():
+        rng = np.random.default_rng(7)
+        pc = PrefixCache(max_blocks=16, block_tokens=4)
+        trace = []
+        for _ in range(200):
+            toks = [int(t) for t in rng.integers(0, 6, size=rng.integers(4, 17))]
+            if rng.random() < 0.5:
+                n, _ = pc.index.lookup(toks)
+                trace.append(("l", n))
+            else:
+                pc.insert(toks, *_fake_kv((len(toks) // 4) * 4))
+                trace.append(("i", len(pc.index)))
+        return trace, pc.stats()
+
+    t1, s1 = run()
+    t2, s2 = run()
+    assert t1 == t2
+    assert s1 == s2
+    assert s1["evictions"] > 0          # the workload actually churned
+    assert s1["blocks"] <= 16
+
+
+def test_kvpool_refuses_puts_past_capacity():
+    pool = KVBlockPool(max_blocks=2, block_tokens=4)
+    k, v = _fake_kv(4)
+    b0, b1 = pool.put(k, v), pool.put(k, v)
+    assert pool.put(k, v) is None and pool.full
+    pool.free(b0)
+    assert pool.put(k, v) is not None
+    assert pool.lru_order()[0] == b1    # oldest surviving block is LRU
+
+
+# ---------------------------------------------------------------------------
+# Semantic cache guards
+# ---------------------------------------------------------------------------
+
+
+def _entry(task, cluster=0, model="m", wh=0.01):
+    return SemanticEntry(text="t", task_label=task, cluster=cluster,
+                         model_name=model, tokens=[1], text_out="out",
+                         energy_wh=wh, accuracy=1.0, input_tokens=4,
+                         output_tokens=1)
+
+
+def test_semantic_cache_never_crosses_task_types():
+    sc = SemanticCache(dim=4, threshold=0.5, max_entries=8)
+    e = np.array([1.0, 0, 0, 0], np.float32)
+    sc.insert(e, _entry(task=0))
+    assert sc.lookup(e, task_label=0, cluster=0) is not None
+    # identical embedding, different task: the guard must win over cos=1.0
+    assert sc.lookup(e, task_label=1, cluster=0) is None
+    # identical embedding + task, different cluster: guarded too
+    assert sc.lookup(e, task_label=0, cluster=3) is None
+
+
+def test_semantic_threshold_and_lru_eviction():
+    sc = SemanticCache(dim=2, threshold=0.9, max_entries=2)
+    e0 = np.array([1.0, 0.0], np.float32)
+    e1 = np.array([0.0, 1.0], np.float32)
+    sc.insert(e0, _entry(0, model="a"))
+    sc.insert(e1, _entry(0, model="b"))
+    near = np.array([0.95, 0.312], np.float32)
+    near /= np.linalg.norm(near)
+    assert sc.lookup(near, 0, 0).model_name == "a"    # cos ≈ 0.95 ≥ 0.9
+    far = np.array([0.7, 0.714], np.float32)
+    far /= np.linalg.norm(far)
+    assert sc.lookup(far, 0, 0) is None               # under threshold
+    # e1 is now LRU (e0 was touched by the hit): a third insert evicts it
+    sc.insert(e0 * -1.0, _entry(0, model="c"))
+    assert sc.lookup(e1, 0, 0) is None
+    assert sc.lookup(e0, 0, 0).model_name == "a"
+    assert sc.evictions == 1
+
+
+# ---------------------------------------------------------------------------
+# Scheduler integration
+# ---------------------------------------------------------------------------
+
+
+def _small_server(cache_mode="full", **kw):
+    cfg = get_config("granite-3-8b", smoke=True, vocab_size=tok.VOCAB_SIZE,
+                     dtype="float32")
+    eng = ModelEngine("granite-3-8b", cfg, jax.random.PRNGKey(0),
+                      max_batch=2, max_len=64)
+    router = GreenServRouter(RouterConfig(lam=0.4, energy_scale_wh=0.05),
+                             ModelPool([eng.profile]))
+    cache = GreenCache(mode=cache_mode, kv_cache_blocks=32,
+                       semantic_threshold=0.99)
+    server = PoolServer(router, {"granite-3-8b": eng}, tokenizer=tok.encode,
+                        prefill_chunk=4, cache=cache, **kw)
+    return server, eng, cache
+
+
+def test_semantic_hit_short_circuits_routing_and_engines():
+    server, eng, cache = _small_server(telemetry=Telemetry())
+    q = Query(uid=0, text="Answer the question about entropy now",
+              max_new_tokens=3)
+    server.submit_batch([q])
+    server.run_until_drained()
+    routed = server.router.n_routed
+    dup = Query(uid=1, text="Answer the question about entropy now",
+                max_new_tokens=3)
+    reqs = server.submit_batch([dup])
+    assert reqs[0].done                               # already answered
+    assert server.responses[1].tokens == server.responses[0].tokens
+    assert server.responses[1].energy_wh == 0.0
+    assert server.router.n_routed == routed           # no bandit pull
+    assert eng.pending == 0                           # no engine work
+    assert server.stats["cache_hits"] == 1
+    prom = to_prometheus(server.telemetry.registry)
+    assert 'greenserv_cache_hits_total{kind="semantic"} 1.0' in prom
+
+
+def test_configure_engine_applies_all_knobs_to_late_joiners():
+    """add_engine goes through the same _configure_engine as construction:
+    a late engine gets the pool-level prefill_chunk AND its prefix-cache
+    handle AND telemetry pre-binding — no knob silently missed."""
+    server, _, cache = _small_server(cache_mode="prefix",
+                                     telemetry=Telemetry())
+    cfg = get_config("qwen2-moe-a2.7b", smoke=True,
+                     vocab_size=tok.VOCAB_SIZE, dtype="float32")
+    late = ModelEngine("qwen2-moe-a2.7b", cfg, jax.random.PRNGKey(1),
+                       max_batch=2, max_len=64)       # engine default: 1
+    assert late.prefill_chunk == 1 and late.prefix_cache is None
+    server.add_engine(late.profile, late)
+    assert late.prefill_chunk == 4                    # server-level knob
+    assert late.prefix_cache is cache.prefix_for("qwen2-moe-a2.7b")
+    prom = to_prometheus(server.telemetry.registry)
+    assert 'greenserv_queue_depth{engine="qwen2-moe-a2.7b"}' in prom
+    assert server.telemetry.events.counts["engine_added"] == 1
+
+
+def test_prefix_discount_tilts_routing_toward_warm_arm():
+    """Two identical-profile arms; arm 1 holds a cached prefix for the
+    query → the energy discount must flip the decision to arm 1."""
+    profiles = [ModelProfile(name=f"m{i}", family="dense", params_b=1.0)
+                for i in range(2)]
+    router = GreenServRouter(RouterConfig(lam=0.5, energy_scale_wh=0.01),
+                             ModelPool(profiles))
+    q = Query(uid=0, text="discount probe")
+    base = router.route_batch([q])[0]
+    other = 1 - base.model_index
+    disc = np.zeros((1, 2))
+    disc[0, other] = 1.0                              # 1 Wh expected saving
+    q2 = Query(uid=1, text="discount probe")
+    tilted = router.route_batch([q2], energy_discounts_wh=disc)[0]
+    assert tilted.model_index == other
+
+
+def test_governor_avoided_energy_credit_and_inflight_discount():
+    gov = EnergyBudgetGovernor(budget_wh=10.0, horizon_queries=100,
+                               control_on_completion=False)
+    gov.bucket_wh = 0.0
+    gov.on_avoided_energy(0.25, "prefix")
+    gov.on_avoided_energy(0.1, "semantic")
+    s = gov.stats()
+    assert s["avoided_prefix_wh"] == pytest.approx(0.25)
+    assert s["avoided_semantic_wh"] == pytest.approx(0.1)
+    assert gov.bucket_wh == pytest.approx(min(0.35, gov.capacity_wh))
+    assert gov.cumulative_wh == 0.0                   # credit, not un-spend
+    # in-flight savings shrink the committed projection (moderate load so
+    # neither error clips at the ±1 bound)
+    gov.on_completion(0.1, 0.0)
+    gov.on_admission(4, 0.0, expected_savings_wh=0.0)
+    hot = gov._rate_error()
+    gov2 = EnergyBudgetGovernor(budget_wh=10.0, horizon_queries=100,
+                                control_on_completion=False)
+    gov2.on_completion(0.1, 0.0)
+    gov2.on_admission(4, 0.0, expected_savings_wh=0.2)
+    assert -1.0 < gov2._rate_error() < hot < 1.0
