@@ -16,6 +16,19 @@ counters (which must also show up in the Prometheus export and the
 governor ledger).  ``--smoke`` asserts the headline claim: ``full`` mode
 cuts cumulative joules by >= 30 % on this workload.
 
+A final pair of governed runs plugs the diurnal carbon signal
+(``telemetry.budget.diurnal_carbon_intensity``) into the governor's
+refill, with the uncached drain window mapped onto one simulated day:
+the first half of the day is the dirty-grid peak (sin > 0), the second
+half the clean trough.  Dirty hours earn less refill credit, so the
+carbon-aware run tightens λ early and relaxes it late *relative to its
+carbon-blind twin* (both runs drift upward on the near-edge budget, so
+the comparison is per-half against the twin, not within one run) — the
+per-half λ means and joule fractions are reported, and ``--smoke``
+asserts the deferral signature: aware dirty-half λ above blind,
+aware clean-half λ below blind, and dirty-half spend fraction no
+higher than the blind run's.
+
     PYTHONPATH=src python -m benchmarks.bench_cache [--smoke] [--out f]
 """
 from __future__ import annotations
@@ -33,7 +46,8 @@ from repro.core.router import GreenServRouter
 from repro.core.types import Query, RouterConfig
 from repro.data import tokenizer as tok
 from repro.serving import ModelEngine, PoolServer
-from repro.telemetry import (EnergyBudgetGovernor, Telemetry, dump_jsonl,
+from repro.telemetry import (EnergyBudgetGovernor, Telemetry,
+                             diurnal_carbon_intensity, dump_jsonl,
                              to_prometheus)
 
 # ~39 chars each => 40-token preambles after BOS (byte tokenizer); tails
@@ -84,28 +98,42 @@ def _build_pool(arch_ids: List[str], seed: int = 0):
 
 def drive(arch_ids: List[str], queries: List[Query], arrivals: List[float],
           cache_mode: str, budget_wh: Optional[float] = None,
-          dt_s: float = 0.05, seed: int = 0) -> dict:
+          dt_s: float = 0.05, seed: int = 0,
+          carbon_amplitude: Optional[float] = None,
+          day_s: Optional[float] = None) -> dict:
     """Serve the stream on a virtual clock; returns the mode's scorecard.
 
     With ``budget_wh`` the wall-clock governor runs against
     ``horizon_s`` = the stream's span — refill accrues per virtual
     second, so cache hits (bucket credit) and Poisson bursts (drain)
-    exercise the token bucket exactly as live serving would."""
+    exercise the token bucket exactly as live serving would.  ``day_s``
+    compresses one simulated day onto the run (it becomes the governor
+    horizon); with ``carbon_amplitude`` the refill is additionally scaled
+    by the diurnal carbon signal over that day — dirty peak in the first
+    half, clean trough in the second — and the returned ``trace`` of
+    (t, λ, joules) samples shows the deferred spend."""
     engines, pool = _build_pool(arch_ids, seed)
     router = GreenServRouter(RouterConfig(lam=0.4, energy_scale_wh=0.05),
                              pool)
     clk = {"t": 0.0}
-    horizon_s = arrivals[-1] + 5.0
-    governor = (EnergyBudgetGovernor(budget_wh, horizon_s=horizon_s)
+    horizon_s = day_s if day_s is not None else arrivals[-1] + 5.0
+    day_s = day_s if day_s is not None else arrivals[-1]
+    carbon_fn = None
+    if carbon_amplitude is not None:
+        carbon_fn = lambda t: diurnal_carbon_intensity(  # noqa: E731
+            t, amplitude=carbon_amplitude, period_s=day_s)
+    governor = (EnergyBudgetGovernor(budget_wh, horizon_s=horizon_s,
+                                     carbon_fn=carbon_fn)
                 if budget_wh else None)
     telemetry = Telemetry(governor=governor, clock=lambda: clk["t"])
     cache = GreenCache(mode=cache_mode, kv_cache_blocks=128,
-                       semantic_threshold=0.98)
+                       semantic_threshold=0.98, clock=lambda: clk["t"])
     server = PoolServer(router, engines, tokenizer=tok.encode,
                         telemetry=telemetry, prefill_chunk=4, cache=cache)
     i, step = 0, 0
     submit_step: Dict[int, int] = {}
     ttft_steps: Dict[int, int] = {}
+    trace: List[Tuple[float, float, float]] = []   # (t, λ, cumulative J)
     while i < len(queries) or server.inflight:
         due = []
         while i < len(queries) and arrivals[i] <= clk["t"]:
@@ -120,6 +148,10 @@ def drive(arch_ids: List[str], queries: List[Query], arrivals: List[float],
         done = server.step()
         step += 1
         clk["t"] += dt_s
+        lam_now = (governor.current_lambda if governor is not None
+                   else router.config.lam) or router.config.lam
+        trace.append((clk["t"], lam_now,
+                      sum(e.cumulative_joules() for e in engines.values())))
         for uid, req in server.inflight.items():
             if req.generated and uid not in ttft_steps:
                 ttft_steps[uid] = step - submit_step[uid]
@@ -144,7 +176,28 @@ def drive(arch_ids: List[str], queries: List[Query], arrivals: List[float],
         "telemetry": telemetry,
         "governor": governor,
         "cache_stats": cs,
+        "trace": trace,
+        "day_s": day_s,
+        # what the governor actually meters: per-completion response Wh
+        "response_wh": sum(r.energy_wh for r in server.responses.values()),
     }
+
+
+def _half_day_stats(result: dict) -> Tuple[float, float, float]:
+    """(dirty-half mean λ, clean-half mean λ, dirty-half joule fraction)
+    from a governed run's trace over the simulated day (post-drain tail
+    beyond the day is excluded)."""
+    day = result["day_s"]
+    half = day / 2.0
+    trace = [s for s in result["trace"] if s[0] <= day]
+    lam_dirty = [lam for t, lam, _ in trace if t <= half]
+    lam_clean = [lam for t, lam, _ in trace if t > half]
+    total_j = trace[-1][2] if trace else 0.0
+    j_dirty = max((j for t, _, j in trace if t <= half), default=0.0)
+    frac_dirty = j_dirty / max(total_j, 1e-12)
+    return (float(np.mean(lam_dirty)) if lam_dirty else 0.0,
+            float(np.mean(lam_clean)) if lam_clean else 0.0,
+            frac_dirty)
 
 
 def main(n_queries: int = 120, arch_ids: Optional[List[str]] = None,
@@ -181,6 +234,28 @@ def main(n_queries: int = 120, arch_ids: Optional[List[str]] = None,
                  f"{g.get('avoided_semantic_wh', 0.0):.3e}")
     lines.append(f"governor,lambda_final,{g.get('lambda', 0.0):.3f}")
     lines.append(f"governor,pressure,{g.get('pressure', 0.0):.3f}")
+
+    # -- diurnal carbon signal: defer spend across a simulated day ---------
+    # clean-room comparison: no cache (its avoided-energy credits would
+    # mask the refill signal), the simulated day = the uncached run's full
+    # drain window (arrival burst in the morning, backlog through the
+    # evening), and a near-edge budget (5% headroom over the Wh the
+    # governor actually meters per completion) so the dirty-half refill
+    # cut surfaces as λ pressure instead of vanishing into bucket slack
+    drain_s = off["steps"] * 0.05
+    tight_wh = off["response_wh"] * 1.05
+    blind = drive(arch_ids, queries, arrivals, "off", budget_wh=tight_wh,
+                  seed=seed, day_s=drain_s)
+    carbon = drive(arch_ids, queries, arrivals, "off", budget_wh=tight_wh,
+                   seed=seed, carbon_amplitude=0.8, day_s=drain_s)
+    lam_dirty, lam_clean, frac_carbon = _half_day_stats(carbon)
+    b_lam_dirty, b_lam_clean, frac_blind = _half_day_stats(blind)
+    lines.append("carbon,run,lambda_dirty_mean,lambda_clean_mean,"
+                 "dirty_joule_frac")
+    lines.append(f"carbon,aware,{lam_dirty:.3f},{lam_clean:.3f},"
+                 f"{frac_carbon:.1%}")
+    lines.append(f"carbon,blind,{b_lam_dirty:.3f},{b_lam_clean:.3f},"
+                 f"{frac_blind:.1%}")
     if smoke:
         assert reduction >= 0.30, (
             f"cache joule reduction {reduction:.1%} < 30% on the "
@@ -192,6 +267,18 @@ def main(n_queries: int = 120, arch_ids: Optional[List[str]] = None,
                 in prom)
         avoided = g["avoided_prefix_wh"] + g["avoided_semantic_wh"]
         assert avoided > 0.0, "governor ledger missing cache credit"
+        # deferral signature vs the carbon-blind twin: the dirty-grid half
+        # must run a tighter λ (spend deferred out of it) and the clean
+        # half a looser one (boosted refill spends the deferred headroom)
+        assert lam_dirty > b_lam_dirty, (
+            f"carbon governor failed to tighten the dirty half "
+            f"(aware {lam_dirty:.3f} ≤ blind {b_lam_dirty:.3f})")
+        assert lam_clean < b_lam_clean, (
+            f"carbon governor failed to relax the clean half "
+            f"(aware {lam_clean:.3f} ≥ blind {b_lam_clean:.3f})")
+        assert frac_carbon <= frac_blind + 0.05, (
+            f"carbon-aware dirty-half spend {frac_carbon:.1%} exceeds "
+            f"carbon-blind {frac_blind:.1%}")
 
     if out:
         tel = full["telemetry"]

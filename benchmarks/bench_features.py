@@ -1,11 +1,31 @@
-"""Paper Fig. 5: contextual-feature ablation (task / cluster / complexity)."""
+"""Paper Fig. 5: contextual-feature ablation (task / cluster / complexity),
+plus the featurization-throughput / decision-latency mode comparing the
+host reference path against the device (Pallas ``kernels/featurize``)
+pipeline at serving batch sizes.
+
+    PYTHONPATH=src python -m benchmarks.bench_features            # ablation
+    PYTHONPATH=src python -m benchmarks.bench_features --perf     # perf mode
+    PYTHONPATH=src python -m benchmarks.bench_features --smoke --out f.jsonl
+
+``--smoke`` always asserts host/device parity (embeddings within float32
+tolerance, identical routing decisions); on a real TPU backend it
+additionally asserts the device path clears ≥5× featurization throughput
+at batch 64 (interpret-mode Pallas on CPU CI is exempt from the ratio —
+the interpreter is a correctness tool, not a performance one).
+"""
 from __future__ import annotations
 
-from typing import Dict, List
+import argparse
+import json
+import time
+from typing import Dict, List, Optional
 
+import jax
 import numpy as np
 
 from benchmarks.common import make_router, run_policy, stream
+from repro.core.embedding import EmbeddingModel
+from repro.core.types import Feedback, Query
 from repro.data import OutcomeSimulator
 
 CONFIGS = {
@@ -47,5 +67,138 @@ def main(per_task: int = 200, n_runs: int = 2) -> List[str]:
     return lines
 
 
+# ---------------------------------------------------------------------------
+# Featurization throughput + decision latency: host vs device.
+# ---------------------------------------------------------------------------
+
+
+def _warm_router(router, n: int = 8) -> None:
+    """Identical feedback history → identical bandit/k-means state, so the
+    host and device routers decide from the same posterior."""
+    for i in range(n):
+        q = Query(uid=900_000 + i,
+                  text=f"Summarize the following.\nDoc {i} on topic {i % 3} "
+                       f"with extra detail words")
+        d = router.route(q)
+        router.feedback(Feedback(
+            query_uid=q.uid, model_index=d.model_index,
+            accuracy=0.3 + 0.2 * (d.model_index % 3),
+            energy_wh=0.01 * (d.model_index + 1), latency_ms=5.0))
+
+
+def _time_encode(fn, texts, n_iter: int) -> float:
+    """Median wall seconds per call (one warmup call for jit compiles)."""
+    fn(texts)
+    times = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        fn(texts)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def perf(batch_sizes=(1, 16, 64), n_iter: int = 5, seed: int = 0
+         ) -> List[dict]:
+    """Per (batch, path) rows: featurization throughput (texts/s) and
+    mean route_batch decision latency (ms), host reference vs the fused
+    device pipeline."""
+    texts = [q.text for q in stream(per_task=13)][: max(batch_sizes)]
+    rows: List[dict] = []
+    for batch in batch_sizes:
+        chunk = texts[:batch]
+        for path in ("host", "device"):
+            em = EmbeddingModel()
+            enc = (em.encode_batch if path == "host"
+                   else em.encode_batch_device)
+            sec = _time_encode(enc, chunk, n_iter)
+            router = make_router(lam=0.4, seed=seed)
+            router.config.featurize = path
+            _warm_router(router)
+            qs0 = [Query(uid=1_000_000 + i, text=t)
+                   for i, t in enumerate(chunk)]
+            router.route_batch(qs0)          # warmup (jit compiles)
+            dec_ms = []
+            for it in range(n_iter):
+                qs = [Query(uid=2_000_000 + it * batch + i, text=t)
+                      for i, t in enumerate(chunk)]
+                t0 = time.perf_counter()
+                router.route_batch(qs)
+                dec_ms.append((time.perf_counter() - t0) * 1e3)
+            rows.append({
+                "batch": batch,
+                "path": path,
+                "featurize_qps": batch / max(sec, 1e-9),
+                "decision_ms": float(np.median(dec_ms)),
+                "backend": jax.default_backend(),
+            })
+    return rows
+
+
+def _assert_parity(seed: int = 0) -> None:
+    """Host and device featurization must agree: embeddings within
+    float32 tolerance, routing decisions identical."""
+    texts = [q.text for q in stream(per_task=8)][:40]
+    em = EmbeddingModel()
+    np.testing.assert_allclose(em.encode_batch_device(texts),
+                               em.encode_batch(texts), atol=1e-5)
+    r_host = make_router(lam=0.4, seed=seed)
+    r_host.config.featurize = "host"
+    r_dev = make_router(lam=0.4, seed=seed)
+    r_dev.config.featurize = "device"
+    _warm_router(r_host), _warm_router(r_dev)
+    qs = [Query(uid=3_000_000 + i, text=t) for i, t in enumerate(texts)]
+    d_host = r_host.route_batch(qs)
+    d_dev = r_dev.route_batch(qs)
+    assert ([d.model_index for d in d_host]
+            == [d.model_index for d in d_dev]), "host/device decision skew"
+
+
+def perf_main(batch_sizes=(1, 16, 64), n_iter: int = 5, smoke: bool = False,
+              out: Optional[str] = None, seed: int = 0) -> List[str]:
+    rows = perf(batch_sizes=batch_sizes, n_iter=n_iter, seed=seed)
+    lines = ["batch,path,featurize_texts_per_s,decision_ms"]
+    for r in rows:
+        lines.append(f"{r['batch']},{r['path']},{r['featurize_qps']:.0f},"
+                     f"{r['decision_ms']:.3f}")
+    by_key = {(r["batch"], r["path"]): r for r in rows}
+    top = max(batch_sizes)
+    ratio = (by_key[(top, "device")]["featurize_qps"]
+             / max(by_key[(top, "host")]["featurize_qps"], 1e-9))
+    lines.append(f"# device/host featurization throughput at batch {top}: "
+                 f"{ratio:.2f}x ({jax.default_backend()} backend)")
+    if smoke:
+        _assert_parity(seed=seed)
+        lines.append("# parity: host vs device embeddings + decisions OK")
+        if jax.default_backend() == "tpu":
+            assert ratio >= 5.0, (
+                f"device featurization only {ratio:.2f}x host at batch "
+                f"{top} (need >=5x on TPU)")
+        else:
+            lines.append("# interpret-mode Pallas (non-TPU backend): "
+                         "throughput-ratio assert skipped, parity enforced")
+    if out:
+        with open(out, "w") as f:
+            for r in rows:
+                f.write(json.dumps(r) + "\n")
+        lines.append(f"dump,rows,{len(rows)}")
+        lines.append(f"dump,path,{out}")
+    return lines
+
+
 if __name__ == "__main__":
-    print("\n".join(main()))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--perf", action="store_true",
+                    help="featurization-throughput + decision-latency mode "
+                         "(host vs device) instead of the Fig. 5 ablation")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: perf mode + parity asserts (>=5x device "
+                         "throughput at batch 64 on TPU backends)")
+    ap.add_argument("--out", default=None,
+                    help="JSONL metrics dump path (CI artifact; perf mode)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.perf or args.smoke:
+        print("\n".join(perf_main(smoke=args.smoke, out=args.out,
+                                  seed=args.seed)))
+    else:
+        print("\n".join(main()))

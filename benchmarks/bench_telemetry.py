@@ -46,25 +46,25 @@ class TimedTelemetry(Telemetry):
         super().__init__(*args, **kwargs)
         self.hook_s = 0.0
 
-    def _timed(self, fn, *a):
+    def _timed(self, fn, *a, **kw):
         t0 = time.perf_counter()
-        fn(*a)
+        fn(*a, **kw)
         self.hook_s += time.perf_counter() - t0
 
-    def on_admit(self, *a):
-        self._timed(super().on_admit, *a)
+    def on_admit(self, *a, **kw):
+        self._timed(super().on_admit, *a, **kw)
 
-    def on_completion(self, *a):
-        self._timed(super().on_completion, *a)
+    def on_completion(self, *a, **kw):
+        self._timed(super().on_completion, *a, **kw)
 
-    def on_hedge(self, *a):
-        self._timed(super().on_hedge, *a)
+    def on_hedge(self, *a, **kw):
+        self._timed(super().on_hedge, *a, **kw)
 
-    def on_restart(self, *a):
-        self._timed(super().on_restart, *a)
+    def on_restart(self, *a, **kw):
+        self._timed(super().on_restart, *a, **kw)
 
-    def on_step(self, *a):
-        self._timed(super().on_step, *a)
+    def on_step(self, *a, **kw):
+        self._timed(super().on_step, *a, **kw)
 
 
 def measure_overhead(queries: Sequence[Query], trials: int = 3) -> dict:

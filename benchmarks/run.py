@@ -45,6 +45,9 @@ def main() -> None:
     section("Fig5: feature ablation",
             lambda: bench_features.main(per_task=max(per_task // 2, 50),
                                         n_runs=n_runs))
+    section("Featurization: host vs device throughput + decision latency",
+            lambda: bench_features.perf_main(n_iter=2 if args.fast else 5,
+                                             smoke=args.fast))
     section("Fig6: model addition",
             lambda: bench_model_addition.main(per_task=per_task))
     section("Table1: RouterBench",

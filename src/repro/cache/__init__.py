@@ -23,7 +23,7 @@ governor's credit ledger; see ``docs/CACHING.md``.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -40,13 +40,18 @@ class GreenCache:
     ``mode`` selects which layers are live: ``off`` (inert — convenient
     for flag plumbing), ``prefix``, ``semantic``, or ``full`` (both).
     ``kv_cache_blocks``/``block_tokens`` size each per-engine KV pool;
-    ``semantic_threshold``/``semantic_entries`` parameterize the response
-    cache.
+    ``semantic_threshold``/``semantic_entries``/``semantic_ttl_s``
+    parameterize the response cache (``semantic_ttl_s``: max entry age in
+    seconds before a cached answer ages out; ``clock`` supplies the time
+    source — pass a virtual clock in simulation, default is monotonic
+    wall time).
     """
 
     def __init__(self, mode: str = "full", kv_cache_blocks: int = 256,
                  block_tokens: int = 8, semantic_threshold: float = 0.92,
-                 semantic_entries: int = 512, cluster_guard: bool = True):
+                 semantic_entries: int = 512, cluster_guard: bool = True,
+                 semantic_ttl_s: Optional[float] = None,
+                 clock: Optional[Callable[[], float]] = None):
         if mode not in CACHE_MODES:
             raise ValueError(f"mode must be one of {CACHE_MODES}, got {mode!r}")
         self.mode = mode
@@ -56,7 +61,8 @@ class GreenCache:
         if mode in ("semantic", "full"):
             self.semantic = SemanticCache(threshold=semantic_threshold,
                                           max_entries=semantic_entries,
-                                          cluster_guard=cluster_guard)
+                                          cluster_guard=cluster_guard,
+                                          ttl_s=semantic_ttl_s, clock=clock)
         self._prefix: Dict[str, PrefixCache] = {}
         self._context = None            # router's ContextGenerator, read-only
 
@@ -108,6 +114,16 @@ class GreenCache:
         task = (int(ctx.task_classifier.predict(text)) if ctx.use_task else 0)
         cluster = (ctx.kmeans.assign(emb) if ctx.use_cluster else 0)
         return task, cluster, emb
+
+    def features_batch(self, texts) -> Tuple[np.ndarray, np.ndarray,
+                                             np.ndarray]:
+        """Batched ``features``: (labels (Q,), clusters (Q,), embeddings
+        (Q, dim)) in one featurization pass via the bound context's
+        read-only ``probe_batch`` — on the device path a single fused
+        Pallas call whose embeddings the router reuses afterwards."""
+        if self._context is None:
+            raise RuntimeError("GreenCache.features_batch before bind_context")
+        return self._context.probe_batch(texts)
 
     # -- introspection --------------------------------------------------------
 

@@ -270,17 +270,22 @@ class BanditPolicy:
             mask = np.asarray(self.state.active)[None, :] & feas
             masked = np.where(mask, np.asarray(scores), NEG_INF)
             arms = np.argmax(masked, axis=1)
-            # advance the key so batched selection is not a state no-op
-            # (LinUCB itself never consumes it; the stream does NOT match
-            # what Q sequential select() calls would produce)
-            key, _ = jax.random.split(self.state.key)
-            self.state = self.state._replace(key=key)
+            self.advance_key()
             return arms.astype(np.int64), masked.astype(np.float32)
         arms = np.zeros(q, dtype=np.int64)
         masked = np.zeros((q, m), dtype=np.float32)
         for i in range(q):
             arms[i], masked[i] = self.select(X[i], feas[i])
         return arms, masked
+
+    def advance_key(self) -> None:
+        """Advance the PRNG key so a batched selection is not a state no-op
+        (LinUCB never consumes it for scoring; the stream does NOT match
+        what Q sequential select() calls would produce).  Shared by the
+        host ``select_batch`` fast path and the router's fused device
+        pipeline so both leave the bandit state identically."""
+        key, _ = jax.random.split(self.state.key)
+        self.state = self.state._replace(key=key)
 
     def update(self, arm: int, x: np.ndarray, reward: float) -> None:
         self.state = self._update(self.state, jnp.int32(arm), jnp.asarray(x),

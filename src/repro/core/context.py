@@ -11,12 +11,24 @@ Three feature extractors feed the context vector x_t = [l_t, c_t, p_t]:
 
 Categorical features are one-hot encoded with an intercept appended (§4.2.4):
 d = N_tasks + K + N_bins + 1.
+
+Two featurization placements share this module (``RouterConfig.featurize``):
+the host numpy path (``ContextGenerator.batch`` — the reference
+implementation) and the device path, whose pieces live here —
+``kmeans_update_scan`` replays the Eq. 10 sequential centroid updates as a
+``lax.scan`` in arrival order, ``kmeans_assign_batch`` is the read-only
+probe assignment, and ``_probe_pipeline`` fuses featurize+classify+assign
+for the scheduler's cache probe.  The router composes them with the
+``kernels/featurize`` and ``kernels/linucb`` Pallas kernels into one jitted
+decision program; the two placements agree exactly
+(tests/test_featurize_parity.py).
 """
 from __future__ import annotations
 
+import functools
 import re
 import time
-from typing import Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +36,15 @@ import numpy as np
 
 from repro.core.embedding import EmbeddingModel, tokenize
 from repro.core.types import ContextVector, N_TASKS, RouterConfig
+
+
+def _sync(x):
+    """Block until device values are materialized — every ``timings_ms`` /
+    overhead timestamp must sit *after* a sync, or JAX's async dispatch
+    makes the reported per-query featurization overhead optimistic (the
+    clock would stop at enqueue, not completion).  Tolerates numpy/python
+    leaves; syncs only where timestamps are taken, never mid-pipeline."""
+    return jax.block_until_ready(x)
 
 # ---------------------------------------------------------------------------
 # Task classifier: LR over embeddings, trained with full-batch Adam in JAX.
@@ -167,6 +188,144 @@ class OnlineKMeans:
         self.counts = np.asarray(d["counts"], dtype=np.int64).copy()
         self._initialized = int(d["initialized"])
 
+    # -- device path (fused featurize→score pipeline) -----------------------
+
+    def device_state(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """(centroids, counts, initialized) as device arrays for the jitted
+        Eq. 9–10 replay (counts as float32: exact for any realistic stream,
+        and the Eq. 10 step divides by them)."""
+        return (jnp.asarray(self.centroids),
+                jnp.asarray(self.counts, jnp.float32),
+                jnp.int32(self._initialized))
+
+    def load_device_state(self, centroids, counts, initialized) -> None:
+        """Write a jitted update's state back into the host mirror."""
+        self.centroids = np.asarray(centroids, dtype=np.float32).copy()
+        self.counts = np.asarray(np.rint(np.asarray(counts)), dtype=np.int64)
+        self._initialized = int(initialized)
+
+    def update_batch_device(self, embs: np.ndarray) -> np.ndarray:
+        """Assign + update a whole batch on device (one jitted scan) and
+        sync the state back; returns (Q,) cluster ids.  Semantically
+        identical to Q sequential ``update`` calls — the scan replays the
+        Eq. 10 centroid shifts in arrival order."""
+        cent, cnt, ini = self.device_state()
+        cent, cnt, ini, clusters = _kmeans_scan_jit(
+            cent, cnt, ini, jnp.asarray(embs, jnp.float32))
+        self.load_device_state(cent, cnt, ini)
+        return np.asarray(clusters, dtype=np.int64)
+
+
+def kmeans_update_scan(centroids, counts, initialized, embs, valid=None):
+    """Eq. 9–10 over a batch as a ``lax.scan`` in arrival order.
+
+    Each step replays exactly what ``OnlineKMeans.update`` does on host:
+    seed the next free centroid when fewer than K *distinct* embeddings
+    have been seen (distinctness = np.allclose's |c−e| ≤ atol + rtol·|e|
+    with atol=1e-6, rtol=1e-5), otherwise cosine-assign over the live
+    centroids and apply the incremental update μ_c += (e−μ_c)/(N_c+1).
+    The sequential dependency is intrinsic — each update shifts the
+    centroid the next assignment sees — which is why this is a scan and
+    not a vmap; batched and sequential featurization therefore agree.
+
+    centroids: (K, D) f32; counts: (K,) f32; initialized: () i32;
+    embs: (Q, D) f32 → (centroids', counts', initialized', clusters (Q,)).
+    ``valid`` (Q,) bool marks real rows — padding rows (callers pad Q to a
+    power of two for jit-cache stability) leave the state untouched and
+    get cluster 0.
+    """
+    k = centroids.shape[0]
+    idx = jnp.arange(k)
+    if valid is None:
+        valid = jnp.ones(embs.shape[0], bool)
+
+    def step(carry, xs):
+        cent, cnt, ini = carry
+        e, v = xs
+        close = jnp.all(
+            jnp.abs(cent - e[None, :]) <= 1e-6 + 1e-5 * jnp.abs(e)[None, :],
+            axis=1)
+        is_dup = jnp.any(close & (idx < ini))
+        can_seed = (ini < k) & ~is_dup
+        # Eq. 9 assignment over the live centroids (at least one)
+        live = jnp.maximum(ini, 1)
+        norms = jnp.linalg.norm(cent, axis=1) \
+            * jnp.maximum(jnp.linalg.norm(e), 1e-12)
+        sims = (cent @ e) / jnp.maximum(norms, 1e-12)
+        c = jnp.argmax(jnp.where(idx < live, sims, -jnp.inf)).astype(jnp.int32)
+        upd_cent = cent.at[c].add((e - cent[c]) / (cnt[c] + 1.0))
+        upd_cnt = cnt.at[c].add(1.0)
+        seed_at = jnp.minimum(ini, k - 1)        # clamped; unused when full
+        seed_cent = cent.at[seed_at].set(e)
+        seed_cnt = cnt.at[seed_at].set(1.0)
+        new_cent = jnp.where(can_seed, seed_cent, upd_cent)
+        new_cnt = jnp.where(can_seed, seed_cnt, upd_cnt)
+        cluster = jnp.where(v, jnp.where(can_seed, ini, c), 0)
+        return ((jnp.where(v, new_cent, cent),
+                 jnp.where(v, new_cnt, cnt),
+                 ini + (v & can_seed).astype(ini.dtype)),
+                cluster)
+
+    (cent, cnt, ini), clusters = jax.lax.scan(
+        step, (centroids, counts, initialized), (embs, valid))
+    return cent, cnt, ini, clusters
+
+
+def kmeans_assign_batch(centroids, initialized, embs):
+    """Read-only Eq. 9 assignment for a batch (the cache probe): no state
+    change, so the rows vectorize — identical to Q independent ``assign``
+    calls on the same centroids."""
+    k = centroids.shape[0]
+    live = jnp.maximum(initialized, 1)
+    cnorm = jnp.linalg.norm(centroids, axis=1)                   # (K,)
+    enorm = jnp.maximum(jnp.linalg.norm(embs, axis=1), 1e-12)    # (Q,)
+    sims = (embs @ centroids.T) / jnp.maximum(cnorm[None, :] * enorm[:, None],
+                                              1e-12)
+    sims = jnp.where(jnp.arange(k)[None, :] < live, sims, -jnp.inf)
+    return jnp.argmax(sims, axis=1).astype(jnp.int32)
+
+
+_kmeans_scan_jit = jax.jit(kmeans_update_scan)
+
+
+def _pad_cols(a: np.ndarray, width: int, fill) -> np.ndarray:
+    """Right-pad a (Q, L) feature tensor to L=width (stacking full-text and
+    instruction rows into one kernel call needs a common L)."""
+    if a.shape[1] == width:
+        return a
+    return np.pad(a, ((0, 0), (0, width - a.shape[1])),
+                  constant_values=fill)
+
+
+def _pad_rows(a: np.ndarray, q_pad: int, fill) -> np.ndarray:
+    """Bottom-pad an (n, L) tensor to q_pad rows (padding the batch axis
+    to a power of two bounds the compiled jit variants)."""
+    if q_pad == a.shape[0]:
+        return a
+    out = np.full((q_pad, a.shape[1]), fill, dtype=a.dtype)
+    out[: a.shape[0]] = a
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("n", "use_task", "use_cluster"))
+def _probe_pipeline(ids, weights, proj, w, b, centroids, initialized, *,
+                    n: int, use_task: bool, use_cluster: bool):
+    """Fused read-only probe: featurize (full texts, plus instruction
+    slices when the task feature is on, stacked into one kernel call) →
+    classifier logits → Eq. 9 assignment.  No state is written."""
+    from repro.kernels.featurize import hashed_embed
+    e = hashed_embed(ids, weights, proj)
+    emb, emb_i = e[:n], e[n:]
+    if use_task:
+        labels = jnp.argmax(emb_i @ w + b, axis=1).astype(jnp.int32)
+    else:
+        labels = jnp.zeros((n,), jnp.int32)
+    if use_cluster:
+        clusters = kmeans_assign_batch(centroids, initialized, emb)
+    else:
+        clusters = jnp.zeros((n,), jnp.int32)
+    return labels, clusters, emb
+
 
 # ---------------------------------------------------------------------------
 # Flesch Reading Ease (Eq. 11) + equal-width binning.
@@ -239,7 +398,10 @@ class ContextGenerator:
         self.use_task = True
         self.use_cluster = True
         self.use_complexity = True
-        self.timings_ms = {"task": 0.0, "cluster": 0.0, "complexity": 0.0, "n": 0}
+        # "featurize" is the device path's host hashing pass; on the host
+        # path it stays 0 (hashing is inside the task/cluster stages there)
+        self.timings_ms = {"task": 0.0, "cluster": 0.0, "complexity": 0.0,
+                           "featurize": 0.0, "n": 0}
 
     def set_features(self, task: bool = True, cluster: bool = True,
                      complexity: bool = True) -> None:
@@ -292,6 +454,7 @@ class ContextGenerator:
             task_labels = np.zeros(n, dtype=np.int64)
         elif task_labels is None:
             task_labels = self.task_classifier.predict_batch(texts)
+        _sync(task_labels)                    # timing boundary, not pipeline
         t1 = time.perf_counter()
         if self.use_cluster:
             embs = (embeddings if embeddings is not None
@@ -299,6 +462,7 @@ class ContextGenerator:
             clusters = [self.kmeans.update(e) for e in embs]
         else:
             clusters = [0] * n
+        _sync(clusters)
         t2 = time.perf_counter()
         comp = ([self.complexity(t) for t in texts] if self.use_complexity
                 else [(100.0, 0)] * n)
@@ -307,11 +471,118 @@ class ContextGenerator:
         self.timings_ms["cluster"] += (t2 - t1) * 1e3
         self.timings_ms["complexity"] += (t3 - t2) * 1e3
         self.timings_ms["n"] += n
+        return self.make_contexts(task_labels, clusters, comp)
+
+    def make_contexts(self, task_labels, clusters, comp) -> List[ContextVector]:
+        """Index-aligned ContextVectors from per-query (label, cluster,
+        (score, bin)) triples — shared by the host and device paths (the
+        one-hot layout is ``encode``'s, identically 0/1 on both)."""
         return [ContextVector(
-            task_label=int(task_labels[i]), cluster=clusters[i],
+            task_label=int(task_labels[i]), cluster=int(clusters[i]),
             complexity_bin=comp[i][1], complexity_score=comp[i][0],
-            vector=self.encode(int(task_labels[i]), clusters[i], comp[i][1]))
-            for i in range(n)]
+            vector=self.encode(int(task_labels[i]), int(clusters[i]),
+                               comp[i][1]))
+            for i in range(len(task_labels))]
+
+    # -- device featurization (the fused featurize→score pipeline) ----------
+
+    @property
+    def device_active(self) -> bool:
+        """True when featurization should run through the Pallas pipeline
+        (``RouterConfig.featurize`` toggle; "auto" = accelerator only)."""
+        return self.config.resolve_featurize_device()
+
+    def complexity_batch(self, texts: Sequence[str]
+                         ) -> Tuple[List[Tuple[float, int]], np.ndarray]:
+        """Host Flesch stage: [(score, bin)] plus the (Q,) bin array the
+        device one-hot encoder consumes.  Pure string/regex work — this
+        stage has no dense arithmetic to move off host."""
+        if self.use_complexity:
+            comp = [self.complexity(t) for t in texts]
+        else:
+            comp = [(100.0, 0)] * len(texts)
+        return comp, np.asarray([b for _, b in comp], dtype=np.int32)
+
+    def instruction_features(self, texts: Sequence[str]
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+        """Hashed (ids, weights) for the classifier's instruction slices."""
+        return self.embedder.hashed_features(
+            [self.task_classifier.instruction_text(t) for t in texts])
+
+    def padded_feature_tensors(self, texts: Sequence[str], want_full: bool,
+                               want_instr: bool, q_pad: int
+                               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Stacked, padded (ids, weights) for the fused device pipelines:
+        the full-text half (when ``want_full``) followed by the
+        instruction half (when ``want_instr``), each column-padded to one
+        power-of-two L (floor 128, fill id −1 / weight 0) and row-padded
+        to ``q_pad`` — the single owner of the layout both
+        ``_probe_pipeline`` and the router's ``_fused_decide`` slice at
+        the padded boundary (``e[:q_pad]`` / ``e[q_pad:]``)."""
+        from repro.kernels.featurize.ops import pad_pow2
+        halves = []
+        if want_full:
+            halves.append(self.embedder.hashed_features(texts))
+        if want_instr:
+            halves.append(self.instruction_features(texts))
+        width = pad_pow2(max(h[0].shape[1] for h in halves), floor=128)
+        ids = np.concatenate(
+            [_pad_rows(_pad_cols(i, width, -1), q_pad, -1)
+             for i, _ in halves])
+        weights = np.concatenate(
+            [_pad_rows(_pad_cols(w, width, 0.0), q_pad, 0.0)
+             for _, w in halves])
+        return ids, weights
+
+    def classifier_params(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self.task_classifier.w, self.task_classifier.b
+
+    def record_device_batch(self, n: int, featurize_ms: float,
+                            complexity_ms: float) -> None:
+        """Account a device-path batch in ``timings_ms`` (the fused
+        task+cluster+score time lives in the router's decision clock —
+        stages inside one jitted call cannot be timed separately without
+        syncing mid-pipeline)."""
+        self.timings_ms["featurize"] += featurize_ms
+        self.timings_ms["complexity"] += complexity_ms
+        self.timings_ms["n"] += n
+
+    def probe_batch(self, texts: Sequence[str]
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Read-only batched features for cache probes: (task labels,
+        cluster assignments, unit embeddings), one featurization pass for
+        the whole batch.  Mutates nothing — classifier ``predict`` and
+        k-means ``assign`` semantics; Eq. 10 updates stay exclusive to
+        routing.  On the device path this is one fused jitted call whose
+        embeddings the router then reuses (the query is embedded once per
+        lifecycle)."""
+        n = len(texts)
+        if n == 0:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z.copy(), np.zeros((0, self.embedder.dim), np.float32)
+        if not self.device_active:
+            embs = self.embedder.encode_batch(texts)
+            labels = (self.task_classifier.predict_batch(texts)
+                      if self.use_task else np.zeros(n, dtype=np.int64))
+            clusters = (np.asarray([self.kmeans.assign(e) for e in embs],
+                                   dtype=np.int64) if self.use_cluster
+                        else np.zeros(n, dtype=np.int64))
+            return labels, clusters, embs
+        from repro.kernels.featurize.ops import pad_pow2
+        # Q and L padded to powers of two so the compiled probe variants
+        # stay bounded (padding rows are read-only garbage, sliced off)
+        q_pad = pad_pow2(n)
+        ids, weights = self.padded_feature_tensors(
+            texts, want_full=True, want_instr=self.use_task, q_pad=q_pad)
+        cent, _, ini = self.kmeans.device_state()
+        w, b = self.classifier_params()
+        labels, clusters, emb = _probe_pipeline(
+            jnp.asarray(ids), jnp.asarray(weights), self.embedder.proj_device,
+            w, b, cent, ini, n=q_pad, use_task=self.use_task,
+            use_cluster=self.use_cluster)
+        return (np.asarray(labels, dtype=np.int64)[:n],
+                np.asarray(clusters, dtype=np.int64)[:n],
+                np.asarray(emb)[:n])
 
     def mean_overhead_ms(self) -> dict:
         n = max(self.timings_ms["n"], 1)

@@ -17,17 +17,84 @@ serving runtime batch/queue independently.
 """
 from __future__ import annotations
 
+import functools
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bandits import BanditPolicy
-from repro.core.context import ContextGenerator
+from repro.core.bandits import NEG_INF, BanditPolicy
+from repro.core.context import (ContextGenerator, _sync,
+                                kmeans_update_scan)
 from repro.core.pool import ModelPool
 from repro.core.rewards import RegretTracker, RewardManager, scalarize
 from repro.core.types import (ContextVector, Feedback, ModelProfile, Query,
                               RouteDecision, RouterConfig)
+from repro.kernels.featurize import hashed_embed
+from repro.kernels.featurize.ops import pad_pow2
+from repro.kernels.linucb import linucb_scores
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mode", "use_task", "use_cluster", "use_complexity", "n_tasks",
+    "n_clusters", "n_bins", "alpha"))
+def _fused_decide(ids, weights, emb_in, labels_in, proj, w_clf, b_clf,
+                  centroids, kcounts, kinit, comp_bins, feasible, valid,
+                  a_inv, theta, active, *, mode: str, use_task: bool,
+                  use_cluster: bool, use_complexity: bool, n_tasks: int,
+                  n_clusters: int, n_bins: int, alpha: float):
+    """The whole routing decision as one jitted device program.
+
+    featurize (Pallas hashed-embedding kernel over the padded id/weight
+    tensors) → task-classifier logits → Eq. 9–10 k-means scan in arrival
+    order → one-hot context encoding → fused Pallas LinUCB scoring →
+    feasibility-masked argmax.  One host→device transfer in (feature ids,
+    complexity bins, feasibility), one device→host transfer out (arms,
+    scores, labels, clusters, k-means state).
+
+    ``mode`` says what the stacked id tensor holds: "both" = full texts
+    then instruction slices, "full"/"instr" = one of them, "none" = the
+    caller forwarded embeddings/labels and no featurization is needed.
+    Every (Q,)-shaped input is padded to a power of two by the caller
+    (bounding the compiled variants); ``valid`` marks the real rows —
+    padding rows must not touch the k-means state and are sliced off on
+    the host.
+    """
+    q = comp_bins.shape[0]
+    emb, emb_i = emb_in, None
+    if mode == "both":
+        e2 = hashed_embed(ids, weights, proj)
+        emb, emb_i = e2[:q], e2[q:]
+    elif mode == "full":
+        emb = hashed_embed(ids, weights, proj)
+    elif mode == "instr":
+        emb_i = hashed_embed(ids, weights, proj)
+    if use_task:
+        labels = (jnp.argmax(emb_i @ w_clf + b_clf, axis=1).astype(jnp.int32)
+                  if labels_in is None else labels_in)
+    else:
+        labels = jnp.zeros((q,), jnp.int32)
+    if use_cluster:
+        centroids, kcounts, kinit, clusters = kmeans_update_scan(
+            centroids, kcounts, kinit, emb, valid=valid)
+    else:
+        clusters = jnp.zeros((q,), jnp.int32)
+    parts = [
+        (jax.nn.one_hot(labels, n_tasks) if use_task
+         else jnp.zeros((q, n_tasks))),
+        (jax.nn.one_hot(clusters, n_clusters) if use_cluster
+         else jnp.zeros((q, n_clusters))),
+        (jax.nn.one_hot(comp_bins, n_bins) if use_complexity
+         else jnp.zeros((q, n_bins))),
+        jnp.ones((q, 1)),
+    ]
+    x = jnp.concatenate(parts, axis=1).astype(jnp.float32)
+    scores = linucb_scores(a_inv, theta, x, alpha)
+    masked = jnp.where(active[None, :] & feasible, scores, NEG_INF)
+    arms = jnp.argmax(masked, axis=1)
+    return arms, masked, labels, clusters, centroids, kcounts, kinit
 
 
 class GreenServRouter:
@@ -132,23 +199,22 @@ class GreenServRouter:
         work the caller already did on these texts (the scheduler's cache
         probe) into ``ContextGenerator.batch`` — bitwise identical to
         recomputing, since embedder and classifier are deterministic.
+
+        With ``RouterConfig.featurize`` resolving to "device" (and the
+        deterministic LinUCB/Sherman–Morrison policy), featurize→score
+        runs as one fused jitted pipeline (``_fused_decide``): the host
+        contributes one vectorized hashing pass + Flesch bins, the device
+        does everything else.  The host path below stays the reference
+        implementation; both agree (tests/test_featurize_parity.py).
         """
         if not queries:
             return []
-        ctxs = self.context.batch([q.text for q in queries],
-                                  embeddings=embeddings,
-                                  task_labels=task_labels)
-        t0 = time.perf_counter()
-        masks = [self.pool.feasible_mask(q) for q in queries]
-        # a concurrent pool.add() mid-batch yields ragged rows; pad earlier
-        # rows with False (those queries were routed before the new model
-        # existed, matching sequential semantics)
-        width = max(m.shape[0] for m in masks)
-        feasible = np.zeros((len(masks), width), dtype=bool)
-        for i, m in enumerate(masks):
-            feasible[i, : m.shape[0]] = m
-        x = np.stack([c.vector for c in ctxs])
-        arms, scores = self.policy.select_batch(x, feasible)
+        if self._device_featurize_active():
+            ctxs, arms, scores, feasible, t0 = self._featurize_score_device(
+                queries, embeddings, task_labels)
+        else:
+            ctxs, arms, scores, feasible, t0 = self._featurize_score_host(
+                queries, embeddings, task_labels)
         if energy_discounts_wh is not None:
             d = np.asarray(energy_discounts_wh, np.float32)
             if d.shape[0] != len(queries):
@@ -183,6 +249,114 @@ class GreenServRouter:
             self._pending[q.uid] = decision
             decisions.append(decision)
         return decisions
+
+    # -- featurize→score backends (route_batch dispatches between them) -------
+
+    def _device_featurize_active(self) -> bool:
+        """Device pipeline gate: the ``featurize`` toggle must resolve to
+        device AND the policy must be deterministic batched LinUCB
+        (stochastic policies and the per-decision Cholesky mode need
+        sequential per-query semantics, so they stay on the host path)."""
+        return (self.config.resolve_featurize_device()
+                and self.config.algorithm == "linucb"
+                and self.config.solve_mode == "sherman_morrison")
+
+    def _feasible_matrix(self, queries: Sequence[Query]) -> np.ndarray:
+        masks = [self.pool.feasible_mask(q) for q in queries]
+        # a concurrent pool.add() mid-batch yields ragged rows; pad earlier
+        # rows with False (those queries were routed before the new model
+        # existed, matching sequential semantics)
+        width = max(m.shape[0] for m in masks)
+        feasible = np.zeros((len(masks), width), dtype=bool)
+        for i, m in enumerate(masks):
+            feasible[i, : m.shape[0]] = m
+        return feasible
+
+    def _featurize_score_host(self, queries: Sequence[Query],
+                              embeddings: Optional[np.ndarray],
+                              task_labels: Optional[np.ndarray]
+                              ) -> Tuple[list, np.ndarray, np.ndarray,
+                                         np.ndarray, float]:
+        """Reference path: host featurization, then the batched selector."""
+        ctxs = self.context.batch([q.text for q in queries],
+                                  embeddings=embeddings,
+                                  task_labels=task_labels)
+        t0 = time.perf_counter()
+        feasible = self._feasible_matrix(queries)
+        x = np.stack([c.vector for c in ctxs])
+        arms, scores = self.policy.select_batch(x, feasible)
+        _sync(scores)                 # timing boundary (route_batch's clock)
+        return ctxs, arms, scores, feasible, t0
+
+    def _featurize_score_device(self, queries: Sequence[Query],
+                                embeddings: Optional[np.ndarray],
+                                task_labels: Optional[np.ndarray]
+                                ) -> Tuple[list, np.ndarray, np.ndarray,
+                                           np.ndarray, float]:
+        """Fused path: one host hashing pass, then ``_fused_decide``."""
+        ctx = self.context
+        texts = [q.text for q in queries]
+        n = len(texts)
+        tc0 = time.perf_counter()
+        comp, comp_bins = ctx.complexity_batch(texts)
+        tc1 = time.perf_counter()
+        need_emb = ctx.use_cluster and embeddings is None
+        need_instr = ctx.use_task and task_labels is None
+        emb_in = labels_in = None
+        if embeddings is not None and ctx.use_cluster:
+            emb_in = jnp.asarray(np.asarray(embeddings, np.float32))
+        if task_labels is not None and ctx.use_task:
+            labels_in = jnp.asarray(np.asarray(task_labels), dtype=jnp.int32)
+        mode = {(True, True): "both", (True, False): "full",
+                (False, True): "instr", (False, False): "none"}[
+            (need_emb, need_instr)]
+        # Q (and L, inside padded_feature_tensors) padded to powers of two:
+        # the fused program compiles once per padded shape, so arbitrary
+        # serving batch sizes reuse log2-many variants instead of
+        # retracing per (Q, L)
+        q_pad = pad_pow2(n)
+        if mode == "none":            # jit still wants a (placeholder) leaf
+            ids = np.zeros((q_pad, 1), np.int32)
+            weights = np.zeros((q_pad, 1), np.float32)
+        else:
+            ids, weights = ctx.padded_feature_tensors(
+                texts, want_full=need_emb, want_instr=need_instr,
+                q_pad=q_pad)
+        if emb_in is not None:
+            emb_in = jnp.pad(emb_in, ((0, q_pad - n), (0, 0)))
+        if labels_in is not None:
+            labels_in = jnp.pad(labels_in, (0, q_pad - n))
+        comp_bins = np.pad(comp_bins, (0, q_pad - n))
+        valid = np.arange(q_pad) < n
+        ctx.record_device_batch(n, (time.perf_counter() - tc1) * 1e3,
+                                (tc1 - tc0) * 1e3)
+        t0 = time.perf_counter()
+        feasible = self._feasible_matrix(queries)
+        feas_pad = np.zeros((q_pad, self.config.max_arms), bool)
+        feas_pad[:n, : feasible.shape[1]] = feasible
+        cent, cnt, ini = ctx.kmeans.device_state()
+        w_clf, b_clf = ctx.classifier_params()
+        st = self.policy.state
+        out = _fused_decide(
+            jnp.asarray(ids), jnp.asarray(weights), emb_in, labels_in,
+            ctx.embedder.proj_device, w_clf, b_clf, cent, cnt, ini,
+            jnp.asarray(comp_bins), jnp.asarray(feas_pad),
+            jnp.asarray(valid), st.A_inv, st.theta, st.active,
+            mode=mode, use_task=ctx.use_task, use_cluster=ctx.use_cluster,
+            use_complexity=ctx.use_complexity,
+            n_tasks=self.config.n_tasks, n_clusters=self.config.n_clusters,
+            n_bins=self.config.n_complexity_bins,
+            alpha=float(self.config.alpha_ucb))
+        _sync(out)                    # timing boundary: the decision clock
+        arms_d, masked, labels, clusters, cent2, cnt2, ini2 = out
+        if ctx.use_cluster:
+            ctx.kmeans.load_device_state(cent2, cnt2, ini2)
+        self.policy.advance_key()     # mirror select_batch's state step
+        ctxs = ctx.make_contexts(np.asarray(labels, dtype=np.int64)[:n],
+                                 np.asarray(clusters, dtype=np.int64)[:n],
+                                 comp)
+        return (ctxs, np.asarray(arms_d, dtype=np.int64)[:n],
+                np.asarray(masked, dtype=np.float32)[:n], feasible, t0)
 
     def feedback(self, fb: Feedback,
                  oracle_reward: Optional[float] = None) -> float:

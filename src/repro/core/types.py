@@ -123,7 +123,28 @@ class RouterConfig:
     energy_scale_wh: float = 1.0      # energy normalization divisor in reward
     algorithm: str = "linucb"         # linucb | cts | eps_greedy | eps_greedy_ctx
     solve_mode: str = "sherman_morrison"  # paper-faithful alternative: "cholesky"
+    # featurization placement: "device" runs the fused featurize→score
+    # pipeline (kernels/featurize + kernels/linucb in one jitted call),
+    # "host" is the reference numpy path, "auto" picks device only where
+    # the Pallas kernels have a compiled fast path (TPU — elsewhere they
+    # run in interpret mode, a correctness tool, not a fast path).  Both
+    # paths agree (parity suite: tests/test_featurize_parity.py);
+    # stochastic bandit algorithms and the cholesky solve mode always
+    # fall back to host.
+    featurize: str = "auto"           # auto | host | device
     seed: int = 0
+
+    def resolve_featurize_device(self) -> bool:
+        """True when the device featurize→score pipeline should run."""
+        if self.featurize == "host":
+            return False
+        if self.featurize == "device":
+            return True
+        if self.featurize != "auto":
+            raise ValueError(
+                f"featurize must be auto|host|device, got {self.featurize!r}")
+        import jax
+        return jax.default_backend() == "tpu"
 
     @property
     def context_dim(self) -> int:

@@ -5,11 +5,12 @@ tiling), ops.py (jit'd wrapper, auto interpret=True off-TPU), and ref.py
 (pure-jnp oracle used by the per-kernel allclose test sweeps).
 """
 from repro.kernels.decode_attention import decode_attention
+from repro.kernels.featurize import hashed_embed
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.linucb import linucb_scores
 from repro.kernels.mamba2 import ssd
 from repro.kernels.moe_gating import topk_gating
 from repro.kernels.rwkv6 import wkv
 
-__all__ = ["decode_attention", "flash_attention", "linucb_scores", "ssd",
-           "topk_gating", "wkv"]
+__all__ = ["decode_attention", "flash_attention", "hashed_embed",
+           "linucb_scores", "ssd", "topk_gating", "wkv"]

@@ -1,0 +1,4 @@
+from repro.kernels.featurize import ops, ref
+from repro.kernels.featurize.ops import hashed_embed
+
+__all__ = ["ops", "ref", "hashed_embed"]

@@ -1,0 +1,72 @@
+"""Batched hashed-embedding featurization kernel (Pallas TPU) — the host
+encoder of ``core/embedding.py`` as a fused device op.
+
+The router's sentence encoder is a hashed bag-of-features map: blake2-hashed
+token/trigram/bigram ids with tf weights, scatter-accumulated into a
+``hash_dim`` count vector, sublinear-tf'd with log1p, projected through a
+fixed Gaussian matrix, and L2-normalized.  The hashing itself is string work
+and stays on host (one vectorized pass building padded ``(Q, L)`` id/weight
+tensors); everything after the ids — the scatter, the tf transform, the
+projection, the normalization — is dense arithmetic and runs here as one
+VMEM pass per Q-block:
+
+    counts[q, h] = Σ_l weights[q, l] · [ids[q, l] == h]      (scatter)
+    emb[q]       = normalize(log1p(counts[q]) @ proj)        (tf + project)
+
+The scatter is expressed as a chunked one-hot contraction (compare a
+``(bq, lb)`` id tile against the bucket iota and contract the ``lb`` axis)
+so it vectorizes on the VPU instead of serializing into per-element stores;
+padding rows use id −1, which matches no bucket.  ``hash_dim`` (2048) and
+``dim`` (384) are lane-aligned, and ``proj`` (3 MB fp32) stays resident in
+VMEM across the whole grid.
+
+log1p(0) = 0, so applying the tf transform unconditionally is exactly the
+host encoder's "skip log1p when the text produced no features" branch — an
+all-padding row yields the same all-zero embedding on both paths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from repro import compat
+
+
+def _featurize_kernel(ids_ref, w_ref, proj_ref, o_ref, *, hash_dim: int,
+                      lb: int):
+    ids = ids_ref[...]                                   # (bq, L) int32
+    w = w_ref[...].astype(jnp.float32)                   # (bq, L)
+    bq, seq_l = ids.shape
+    buckets = jax.lax.broadcasted_iota(jnp.int32, (1, 1, hash_dim), 2)
+    counts = jnp.zeros((bq, hash_dim), jnp.float32)
+    for l0 in range(0, seq_l, lb):                       # static chunk loop
+        onehot = (ids[:, l0:l0 + lb, None] == buckets).astype(jnp.float32)
+        counts = counts + jnp.einsum("ql,qlh->qh", w[:, l0:l0 + lb], onehot)
+    tf = jnp.log1p(counts)
+    v = jax.lax.dot(tf, proj_ref[...].astype(jnp.float32),
+                    preferred_element_type=jnp.float32)  # (bq, dim)
+    norm = jnp.sqrt(jnp.sum(v * v, axis=-1, keepdims=True))
+    o_ref[...] = jnp.where(norm > 0.0, v / jnp.maximum(norm, 1e-30),
+                           v).astype(o_ref.dtype)
+
+
+def hashed_embed_fwd(ids, weights, proj, bq: int, lb: int, interpret: bool):
+    q, _ = ids.shape
+    hash_dim, dim = proj.shape
+    kernel = functools.partial(_featurize_kernel, hash_dim=hash_dim, lb=lb)
+    return pl.pallas_call(
+        kernel,
+        grid=(q // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, ids.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((bq, ids.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((hash_dim, dim), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, dim), jnp.float32),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(ids, weights, proj)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the hashed-embedding featurization kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hashed_embed_ref(ids: jnp.ndarray, weights: jnp.ndarray,
+                     proj: jnp.ndarray) -> jnp.ndarray:
+    """ids/weights: (Q, L) with id −1 = padding; proj: (H, D) → (Q, D)
+    unit embeddings: normalize(log1p(scatter_add(weights by id)) @ proj)."""
+    q, _ = ids.shape
+    h = proj.shape[0]
+    w = jnp.where(ids >= 0, weights.astype(jnp.float32), 0.0)
+    idx = jnp.clip(ids, 0, h - 1)
+    counts = jnp.zeros((q, h), jnp.float32)
+    counts = counts.at[jnp.arange(q)[:, None], idx].add(w)
+    v = jnp.log1p(counts) @ proj.astype(jnp.float32)
+    norm = jnp.linalg.norm(v, axis=-1, keepdims=True)
+    return jnp.where(norm > 0.0, v / jnp.maximum(norm, 1e-30), v)

@@ -94,11 +94,22 @@ def main() -> None:
                     help="cosine similarity floor for a semantic response "
                          "cache hit (task-type/cluster guards always "
                          "apply)")
+    ap.add_argument("--semantic-ttl", type=float, default=None,
+                    help="max age in seconds for semantic response-cache "
+                         "entries; older answers age out (default: no "
+                         "staleness bound)")
+    ap.add_argument("--featurize", default="auto",
+                    choices=["auto", "host", "device"],
+                    help="featurization placement: device = fused Pallas "
+                         "featurize→score pipeline (kernels/featurize), "
+                         "host = reference numpy path, auto = device on "
+                         "TPU (elsewhere Pallas runs in interpret mode)")
     args = ap.parse_args()
 
     engines, pool = build_real_pool(args.pool,
                                     prefill_chunk=args.prefill_chunk)
-    config = RouterConfig(lam=args.lam, energy_scale_wh=0.05)
+    config = RouterConfig(lam=args.lam, energy_scale_wh=0.05,
+                          featurize=args.featurize)
     router = GreenServRouter(config, pool)
     queries = stream_lib.make_stream(per_task=max(args.queries // 5, 1))
     queries = queries[: args.queries]
@@ -109,7 +120,8 @@ def main() -> None:
     telemetry = Telemetry(governor=governor)
     cache = GreenCache(mode=args.cache_mode,
                        kv_cache_blocks=args.kv_cache_blocks,
-                       semantic_threshold=args.semantic_threshold)
+                       semantic_threshold=args.semantic_threshold,
+                       semantic_ttl_s=args.semantic_ttl)
     server = PoolServer(router, engines, tokenizer=tok.encode,
                         hedge_after_steps=args.hedge,
                         accuracy_fn=exact_match_accuracy,

@@ -144,8 +144,17 @@ class PoolServer:
         req_by_uid: Dict[int, Request] = {}
         routable: List[Query] = []
         miss_features: List[Optional[tuple]] = []
-        for query in queries:
-            hit, feats = self._try_semantic(query)
+        # one batched probe featurizes the whole admission (on the device
+        # path this is a single fused kernel call); the per-query loop
+        # below only does the similarity lookups
+        probe = None
+        if (self.cache is not None and self.cache.semantic_enabled
+                and queries):
+            probe = self.cache.features_batch([q.text for q in queries])
+        for i, query in enumerate(queries):
+            feats_in = (None if probe is None else
+                        (int(probe[0][i]), int(probe[1][i]), probe[2][i]))
+            hit, feats = self._try_semantic(query, feats_in)
             if hit is not None:
                 req_by_uid[query.uid] = hit
             else:
@@ -153,8 +162,9 @@ class PoolServer:
                 miss_features.append(feats)
         tokens = [self.tokenizer(q.text) for q in routable]
         discounts = self._prefix_discounts(routable, tokens)
-        # forward the cache probe's feature work (one embed + classify per
-        # query) into routing instead of re-deriving it there
+        # forward the cache probe's feature work (one batched embed +
+        # classify — the device embeddings included) into routing instead
+        # of re-deriving it there
         embs = labels = None
         if routable and miss_features[0] is not None:
             labels = np.asarray([f[0] for f in miss_features], np.int64)
@@ -185,8 +195,8 @@ class PoolServer:
 
     # -- GreenCache consultation (docs/CACHING.md) -------------------------------
 
-    def _try_semantic(self, query: Query
-                      ) -> tuple:
+    def _try_semantic(self, query: Query,
+                      feats: Optional[tuple] = None) -> tuple:
         """(already-DONE Request | None, probe features | None).
 
         A hit synthesizes the cached completion as this query's Response
@@ -198,10 +208,13 @@ class PoolServer:
         like traffic that never arrived.  On a miss the computed
         (task, cluster, embedding) features come back so the query is
         embedded exactly once per lifecycle — routing and the
-        completion-time insert both reuse them."""
+        completion-time insert both reuse them.  ``feats`` carries the
+        batched admission probe's row for this query (one featurization
+        pass per batch; on the device path, one fused kernel call)."""
         if self.cache is None or not self.cache.semantic_enabled:
             return None, None
-        feats = self.cache.features(query.text)
+        if feats is None:
+            feats = self.cache.features(query.text)
         task, cluster, emb = feats
         entry = self.cache.semantic.lookup(emb, task, cluster)
         if entry is None:

@@ -368,3 +368,113 @@ def test_governor_avoided_energy_credit_and_inflight_discount():
     gov2.on_completion(0.1, 0.0)
     gov2.on_admission(4, 0.0, expected_savings_wh=0.2)
     assert -1.0 < gov2._rate_error() < hot < 1.0
+
+
+# ---------------------------------------------------------------------------
+# TTL / staleness policy
+# ---------------------------------------------------------------------------
+
+
+def test_semantic_ttl_expires_entries_on_virtual_clock():
+    clk = {"t": 0.0}
+    sc = SemanticCache(dim=2, threshold=0.9, max_entries=4, ttl_s=10.0,
+                       clock=lambda: clk["t"])
+    e = np.array([1.0, 0.0], np.float32)
+    sc.insert(e, _entry(0, model="a"))
+    clk["t"] = 9.0
+    assert sc.lookup(e, 0, 0).model_name == "a"       # within the TTL
+    clk["t"] = 10.5
+    assert sc.lookup(e, 0, 0) is None                 # aged out
+    assert sc.expirations == 1
+    assert len(sc) == 0                               # slot freed
+    assert sc.stats()["ttl_s"] == 10.0
+
+
+def test_semantic_ttl_refreshes_on_reinsert_not_on_hit():
+    clk = {"t": 0.0}
+    sc = SemanticCache(dim=2, threshold=0.9, max_entries=4, ttl_s=10.0,
+                       clock=lambda: clk["t"])
+    e = np.array([0.0, 1.0], np.float32)
+    sc.insert(e, _entry(0, model="a"))
+    clk["t"] = 8.0
+    assert sc.lookup(e, 0, 0) is not None             # hit does NOT refresh
+    clk["t"] = 11.0
+    assert sc.lookup(e, 0, 0) is None                 # age counts from insert
+    sc.insert(e, _entry(0, model="b"))                # re-insert restarts age
+    clk["t"] = 20.0
+    assert sc.lookup(e, 0, 0).model_name == "b"
+
+
+def test_semantic_ttl_expired_slots_reused_before_lru_eviction():
+    clk = {"t": 0.0}
+    sc = SemanticCache(dim=2, threshold=0.9, max_entries=2, ttl_s=5.0,
+                       clock=lambda: clk["t"])
+    sc.insert(np.array([1.0, 0.0], np.float32), _entry(0, model="old"))
+    clk["t"] = 4.0
+    sc.insert(np.array([0.0, 1.0], np.float32), _entry(0, model="live"))
+    clk["t"] = 6.0                                    # "old" aged out
+    sc.insert(np.array([-1.0, 0.0], np.float32), _entry(0, model="new"))
+    assert sc.evictions == 0                          # reused expired slot
+    assert sc.expirations == 1
+    assert sc.lookup(np.array([0.0, 1.0], np.float32), 0, 0) is not None
+
+
+def test_greencache_plumbs_ttl_and_clock():
+    clk = {"t": 0.0}
+    cache = GreenCache(mode="semantic", semantic_ttl_s=7.0,
+                       clock=lambda: clk["t"])
+    assert cache.semantic.ttl_s == 7.0
+    e = np.zeros(384, np.float32)
+    e[0] = 1.0
+    cache.semantic.insert(e, _entry(0, model="x"))
+    clk["t"] = 8.0
+    assert cache.semantic.lookup(e, 0, 0) is None
+    assert cache.semantic.stats()["expirations"] == 1
+
+
+def test_ttl_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        SemanticCache(ttl_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Batched admission probe (one featurization pass per batch)
+# ---------------------------------------------------------------------------
+
+
+def test_features_batch_matches_per_query_features():
+    cache = GreenCache(mode="semantic")
+    router = GreenServRouter(
+        RouterConfig(lam=0.4, energy_scale_wh=0.05),
+        ModelPool([ModelProfile(name="m0", family="d", params_b=1.0)]))
+    cache.bind_context(router.context)
+    texts = ["Answer the question about entropy now",
+             "Summarize the committee filing on item alpha",
+             "Solve the word problem with held value beta"]
+    labels, clusters, embs = cache.features_batch(texts)
+    for i, t in enumerate(texts):
+        task, cluster, emb = cache.features(t)
+        assert int(labels[i]) == task
+        assert int(clusters[i]) == cluster
+        np.testing.assert_allclose(embs[i], emb, atol=1e-5)
+
+
+def test_submit_batch_uses_one_probe_pass(monkeypatch):
+    server, eng, cache = _small_server(telemetry=Telemetry())
+    calls = {"batch": 0, "single": 0}
+    real_batch = cache.features_batch
+    real_single = cache.features
+    monkeypatch.setattr(
+        cache, "features_batch",
+        lambda texts: calls.__setitem__("batch", calls["batch"] + 1)
+        or real_batch(texts))
+    monkeypatch.setattr(
+        cache, "features",
+        lambda text: calls.__setitem__("single", calls["single"] + 1)
+        or real_single(text))
+    qs = [Query(uid=i, text=f"Probe batching question {i}",
+                max_new_tokens=2) for i in range(3)]
+    server.submit_batch(qs)
+    assert calls["batch"] == 1                 # one pass for the admission
+    assert calls["single"] == 0                # no per-query re-encode
+    server.run_until_drained()

@@ -7,6 +7,8 @@ import pytest
 
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.featurize.ops import hashed_embed
+from repro.kernels.featurize.ref import hashed_embed_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.linucb.ops import linucb_scores
@@ -139,3 +141,26 @@ def test_linucb_kernel(m, d, q, alpha):
     ref = linucb_scores_ref(a_inv, theta, x, alpha)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("q,l,h,d", [(1, 5, 256, 128), (8, 64, 2048, 384),
+                                     # non-power-of-two Q/L: pad + slice
+                                     (7, 37, 512, 128), (12, 200, 2048, 384)])
+def test_featurize_kernel(q, l, h, d):
+    ks = jax.random.split(jax.random.PRNGKey(q + l), 3)
+    ids = jax.random.randint(ks[0], (q, l), 0, h, dtype=jnp.int32)
+    # ragged rows: pad the tail of each row with id -1 / weight 0
+    lens = jax.random.randint(ks[1], (q, 1), 0, l + 1)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (q, l), 1) < lens
+    ids = jnp.where(mask, ids, -1)
+    weights = jnp.where(mask, jax.random.uniform(ks[2], (q, l)) + 0.25, 0.0)
+    proj = jax.random.normal(jax.random.PRNGKey(3), (h, d)) / np.sqrt(h)
+    out = hashed_embed(ids, weights, proj, interpret=True)
+    ref = hashed_embed_ref(ids, weights, proj)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    # unit rows (or exactly zero for all-padding rows)
+    norms = np.linalg.norm(np.asarray(out), axis=1)
+    empty = np.asarray(lens)[:, 0] == 0
+    np.testing.assert_allclose(norms[~empty], 1.0, atol=1e-5)
+    assert np.all(norms[empty] == 0.0)
