@@ -1,0 +1,267 @@
+"""Disaggregated prefill/decode serving vs the monolithic scheduler under
+heavy bursty traffic.
+
+The workload is a Markov-modulated Poisson arrival process — calm stretches
+punctuated by arrival bursts (flash crowds), the traffic geometry Fernandez
+et al. ("Energy Considerations of LLM Inference", PAPERS.md) show dominates
+serving energy — driven entirely on a *virtual clock*: each scheduler tick
+advances time by the pool's modeled roofline step time
+(``ModelEngine.modeled_time_s``), i.e. by what the hardware would actually
+take, with engines running concurrently (the tick's dt is the max over
+engines).  That is how prefill/decode *interference* becomes measurable:
+on a unified engine a decode token riding inside a chunked-prefill tick is
+charged (and timed) through the fused chunk kernel's padded row
+(``chunk_rider_cost``), while role-specialized engines run clean
+decode-only ticks and pay an honest KV-migration DMA at the phase boundary
+instead.
+
+Two runs over the identical seeded stream:
+
+  * ``monolithic``     — one unified engine with 2B slots (the PR-3/PR-4
+    scheduler: every engine does both phases);
+  * ``disaggregated``  — a prefill engine + decode twin (B + B slots,
+    shared params), KV migrated at the phase boundary, arrivals admitted
+    continuously into free prefill slots.
+
+Same weights, same total slot count, same queries — the only differences
+are scheduling and the honest interference/migration meters.  Reported:
+tail TTFT (p50/p95/p99, virtual seconds from *arrival*, so queueing
+counts), metered joules/query, migrations, and the governor's per-role
+energy ledger.  ``--smoke`` asserts the headline: p95/p99 TTFT **and**
+joules/query strictly better disaggregated, with role attribution present.
+
+Emits a ``BENCH_disagg.json`` trajectory artifact (time series of
+completions/joules/inflight per mode) so perf/energy regressions diff
+across PRs (ROADMAP item 5's format).
+
+    PYTHONPATH=src python -m benchmarks.bench_disagg [--smoke] \
+        [--users 20000] [--artifact BENCH_disagg.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import random
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.pool import ModelPool
+from repro.core.router import GreenServRouter
+from repro.core.types import Query, RouterConfig
+from repro.data import tokenizer as tok
+from repro.serving import ModelEngine, PoolServer
+from repro.telemetry import EnergyBudgetGovernor, Telemetry
+
+MAX_LEN = 96
+_TOPICS = ["billing", "retrieval", "summarization", "translation", "triage",
+           "synthesis", "planning", "extraction"]
+
+
+def make_workload(n_users: int, seed: int = 0, calm_s: float = 2e-6,
+                  burst_s: float = 2.5e-7, mean_calm_run: int = 24,
+                  mean_burst_run: int = 48
+                  ) -> Tuple[List[Query], List[float]]:
+    """(queries, arrival times) for ``n_users`` virtual users, one query
+    each.  Arrivals are a two-state Markov-modulated Poisson process:
+    calm stretches (mean inter-arrival ``calm_s``) alternate with flash
+    crowds (``burst_s``, ~8x the rate) whose lengths are geometric.
+    Timescales are *modeled* seconds — the reduced smoke models finish a
+    roofline tick in under a microsecond, so the defaults put calm load
+    near the pool's service rate and bursts well past it (that is the
+    regime where scheduling policy, not raw capacity, sets the tail).
+    Prompts mix short chats with long pasted contexts; generation budgets
+    vary 6-16 tokens.  Fully seeded — replays identically."""
+    rng = random.Random(seed)
+    nrng = np.random.default_rng(seed)
+    queries: List[Query] = []
+    arrivals: List[float] = []
+    t = 0.0
+    in_burst, remaining = False, 0
+    for i in range(n_users):
+        if remaining <= 0:
+            in_burst = not in_burst
+            mean_run = mean_burst_run if in_burst else mean_calm_run
+            remaining = int(nrng.geometric(1.0 / mean_run))
+        remaining -= 1
+        t += float(nrng.exponential(burst_s if in_burst else calm_s))
+        arrivals.append(t)
+        topic = rng.choice(_TOPICS)
+        if rng.random() < 0.4:      # long pasted-context prompt
+            text = (f"user {i} forwards the full {topic} thread: "
+                    + "ctx " * rng.randint(4, 9))
+        else:                       # short chat turn
+            text = f"user {i} asks about {topic}"
+        queries.append(Query(uid=i, text=text,
+                             max_new_tokens=rng.randint(6, 16)))
+    return queries, arrivals
+
+
+def drive(queries: List[Query], arrivals: List[float],
+          disaggregate: bool, arch: str = "granite-3-8b",
+          slots_per_role: int = 2, prefill_chunk: int = 8,
+          seed: int = 0, trace_every: int = 16,
+          max_steps: int = 2_000_000) -> dict:
+    """Serve the stream on the modeled-time virtual clock; returns the
+    mode's scorecard.  ``disaggregate`` picks prefill+decode twins (B+B
+    slots, shared params) vs one unified engine with 2B slots — same
+    weights, same total capacity.  The governor runs in query-horizon
+    mode purely for its phase/role energy ledgers (the budget is set far
+    above the spend so λ never moves and routing stays identical)."""
+    cfg = get_config(arch, smoke=True, vocab_size=tok.VOCAB_SIZE,
+                     dtype="float32", max_seq_len=MAX_LEN)
+    B = slots_per_role
+    key = jax.random.PRNGKey(seed)
+    if disaggregate:
+        eng = ModelEngine(arch, cfg, key, max_batch=B, max_len=MAX_LEN,
+                          prefill_chunk=prefill_chunk)
+        twin = ModelEngine(arch, cfg, key, max_batch=B, max_len=MAX_LEN,
+                           params=eng.params, prefill_chunk=prefill_chunk,
+                           role="decode")
+        engines, decode_engines = {arch: eng}, {arch: twin}
+        all_engines = [eng, twin]
+    else:
+        eng = ModelEngine(arch, cfg, key, max_batch=2 * B, max_len=MAX_LEN,
+                          prefill_chunk=prefill_chunk)
+        engines, decode_engines = {arch: eng}, None
+        all_engines = [eng]
+    pool = ModelPool([eng.profile])
+    router = GreenServRouter(RouterConfig(lam=0.4, energy_scale_wh=0.05),
+                             pool)
+    clk = {"t": 0.0}
+    governor = EnergyBudgetGovernor(1e6, horizon_queries=len(queries))
+    telemetry = Telemetry(governor=governor, clock=lambda: clk["t"])
+    server = PoolServer(router, engines, tokenizer=tok.encode,
+                        telemetry=telemetry, prefill_chunk=prefill_chunk,
+                        decode_engines=decode_engines)
+
+    i, step = 0, 0
+    ttft_s: Dict[int, float] = {}
+    last_time = 0.0
+    traj: List[dict] = []
+    while i < len(queries) or server.inflight or server.arrivals:
+        if (not server.inflight and not server.arrivals
+                and i < len(queries) and arrivals[i] > clk["t"]):
+            clk["t"] = arrivals[i]      # idle pool: jump to the next user
+        while i < len(queries) and arrivals[i] <= clk["t"]:
+            server.enqueue(queries[i])
+            i += 1
+        done = server.step()
+        step += 1
+        # the virtual clock advances by the modeled hardware time of this
+        # tick: engines run concurrently, so dt is the slowest engine's
+        # roofline time for the work it just did
+        now_time = max(e.modeled_time_s() for e in all_engines)
+        clk["t"] += max(now_time - last_time, 1e-7)
+        last_time = now_time
+        for uid, req in server.inflight.items():
+            if req.generated and uid not in ttft_s:
+                ttft_s[uid] = clk["t"] - arrivals[uid]
+        for resp in done:               # completed within their first tick
+            ttft_s.setdefault(resp.uid, clk["t"] - arrivals[resp.uid])
+        if step % trace_every == 0:
+            traj.append({
+                "t_s": round(clk["t"], 6),
+                "completed": len(server.responses),
+                "joules": round(sum(e.cumulative_joules()
+                                    for e in all_engines), 6),
+                "inflight": len(server.inflight) + len(server.arrivals)})
+        if step > max_steps:
+            raise TimeoutError("bench stream failed to drain")
+    joules = sum(e.cumulative_joules() for e in all_engines)
+    vals = np.array([ttft_s[q.uid] for q in queries])
+    g = governor.stats()
+    return {
+        "mode": "disaggregated" if disaggregate else "monolithic",
+        "completed": len(server.responses),
+        "steps": step,
+        "span_s": clk["t"],
+        "ttft_p50_s": float(np.percentile(vals, 50)),
+        "ttft_p95_s": float(np.percentile(vals, 95)),
+        "ttft_p99_s": float(np.percentile(vals, 99)),
+        "joules": joules,
+        "joules_per_query": joules / max(len(server.responses), 1),
+        "response_wh": sum(r.energy_wh for r in server.responses.values()),
+        "migrations": server.stats["migrations"],
+        "role_wh": g["role_wh"],
+        "phase_wh": {"prefill": g["prefill_wh"], "decode": g["decode_wh"]},
+        "trajectory": traj,
+    }
+
+
+def main(n_users: int = 20_000, smoke: bool = False,
+         artifact: Optional[str] = "BENCH_disagg.json",
+         seed: int = 0) -> List[str]:
+    queries, arrivals = make_workload(n_users, seed=seed)
+    runs = {}
+    for disagg in (False, True):
+        runs["disaggregated" if disagg else "monolithic"] = drive(
+            queries, arrivals, disaggregate=disagg, seed=seed)
+    mono, dis = runs["monolithic"], runs["disaggregated"]
+
+    lines = ["mode,ttft_p50_s,ttft_p95_s,ttft_p99_s,joules_per_query,"
+             "migrations,steps,completed"]
+    for r in (mono, dis):
+        lines.append(
+            f"{r['mode']},{r['ttft_p50_s']:.3e},{r['ttft_p95_s']:.3e},"
+            f"{r['ttft_p99_s']:.3e},{r['joules_per_query']:.4e},"
+            f"{r['migrations']},{r['steps']},{r['completed']}")
+    p99_cut = 1.0 - dis["ttft_p99_s"] / max(mono["ttft_p99_s"], 1e-12)
+    jpq_cut = 1.0 - dis["joules_per_query"] / max(mono["joules_per_query"],
+                                                  1e-12)
+    lines.append(f"headline,p99_ttft_cut,{p99_cut:.1%}")
+    lines.append(f"headline,joules_per_query_cut,{jpq_cut:.1%}")
+    rw = dis["role_wh"]
+    lines.append(f"roles,prefill_wh,{rw['prefill']:.3e}")
+    lines.append(f"roles,decode_wh,{rw['decode']:.3e}")
+    lines.append(f"roles,unified_wh,{rw['unified']:.3e}")
+
+    if artifact:
+        with open(artifact, "w") as f:
+            json.dump({
+                "bench": "disagg",
+                "n_users": n_users,
+                "seed": seed,
+                "headline": {"p99_ttft_cut": p99_cut,
+                             "joules_per_query_cut": jpq_cut},
+                "runs": runs,
+            }, f, indent=1, sort_keys=True)
+        lines.append(f"artifact,path,{artifact}")
+
+    if smoke:
+        assert dis["completed"] == mono["completed"] == len(queries)
+        assert dis["migrations"] > 0, "no KV migrations happened"
+        assert dis["ttft_p95_s"] < mono["ttft_p95_s"], (
+            f"disaggregated p95 TTFT {dis['ttft_p95_s']:.4f}s not better "
+            f"than monolithic {mono['ttft_p95_s']:.4f}s")
+        assert dis["ttft_p99_s"] < mono["ttft_p99_s"], (
+            f"disaggregated p99 TTFT {dis['ttft_p99_s']:.4f}s not better "
+            f"than monolithic {mono['ttft_p99_s']:.4f}s")
+        assert dis["joules_per_query"] < mono["joules_per_query"], (
+            f"disaggregated {dis['joules_per_query']:.4e} J/query not "
+            f"better than monolithic {mono['joules_per_query']:.4e}")
+        # per-role attribution flows through the governor ledger
+        assert rw["prefill"] > 0 and rw["decode"] > 0
+        assert mono["role_wh"]["unified"] > 0
+        assert mono["migrations"] == 0
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: small stream, hard asserts (p95/p99 "
+                         "TTFT and joules/query strictly better "
+                         "disaggregated)")
+    ap.add_argument("--users", type=int, default=None,
+                    help="virtual users (one query each; default 20000, "
+                         "smoke 240)")
+    ap.add_argument("--artifact", default="BENCH_disagg.json",
+                    help="trajectory artifact path ('' disables)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    n = args.users or (240 if args.smoke else 20_000)
+    print("\n".join(main(n_users=n, smoke=args.smoke,
+                         artifact=args.artifact or None, seed=args.seed)))

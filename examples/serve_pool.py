@@ -27,8 +27,8 @@ ap.add_argument("--prefill-chunk", type=int, default=8,
                      "token-wise; rwkv falls back to 1, qwen-moe chunks)")
 args = ap.parse_args()
 
-engines, pool = build_real_pool(["rwkv6-1.6b", "qwen2-moe-a2.7b"],
-                                prefill_chunk=args.prefill_chunk)
+engines, pool, _ = build_real_pool(["rwkv6-1.6b", "qwen2-moe-a2.7b"],
+                                   prefill_chunk=args.prefill_chunk)
 router = GreenServRouter(RouterConfig(lam=0.4, energy_scale_wh=0.05,
                                       max_arms=16), pool)
 server = PoolServer(router, engines, tokenizer=tok.encode,

@@ -142,6 +142,39 @@ def prefill_chunk_cost(p: CostModelParams, n_tokens: int, kv_len: int,
     return flops, weight_bytes + kv_bytes
 
 
+def chunk_rider_cost(p: CostModelParams, chunk: int, kv_len: int,
+                     batch: int = 1):
+    """(flops, hbm_bytes) for ONE decode token that *rides along* inside a
+    ``chunk``-wide chunked-prefill step (a mixed tick on a unified
+    engine).  The fused chunk kernel computes all ``chunk`` positions for
+    every live slot — padding is real compute, not free — so the rider's
+    matmul and attention FLOPs are chunk-padded while its HBM traffic
+    stays decode-shaped (weight read + KV read at its depth).  This is
+    the prefill/decode *interference* cost that role-specialized
+    (disaggregated) engines avoid: on a decode-only engine the same token
+    is charged plain ``decode_step_cost``.
+    """
+    C = max(chunk, 1)
+    flops = 2.0 * p.n_active_params * C * batch
+    kv_dim = p.kv_heads * p.head_dim
+    flops += 4.0 * C * max(kv_len, 1) * kv_dim * p.n_layers * batch
+    weight_bytes = p.n_active_params * p.dtype_bytes
+    kv_bytes = 2.0 * max(kv_len, 1) * kv_dim * p.n_layers * p.dtype_bytes \
+        * batch
+    return flops, weight_bytes + kv_bytes
+
+
+def kv_migration_cost(p: CostModelParams, n_tokens: int):
+    """(flops, hbm_bytes) to move ``n_tokens`` of prompt KV between
+    engines at the prefill→decode phase boundary: K and V, read out of
+    the prefill engine's cache and written into the decode engine's slot
+    (2 tensors × 2 directions).  Pure data movement — disaggregation pays
+    this honestly, and still has to win on the metered ledger."""
+    kv_dim = p.kv_heads * p.head_dim
+    bytes_ = 4.0 * max(n_tokens, 0) * kv_dim * p.n_layers * p.dtype_bytes
+    return 0.0, bytes_
+
+
 def prefill_cost(p: CostModelParams, seq_len: int, batch: int = 1):
     """(flops, hbm_bytes) for a full prefill."""
     flops = 2.0 * p.n_active_params * seq_len * batch

@@ -33,13 +33,21 @@ from repro.telemetry import EnergyBudgetGovernor, Telemetry, dump_jsonl
 
 def build_real_pool(arch_ids: List[str], max_batch: int = 4,
                     max_len: int = 192, seed: int = 0,
-                    prefill_chunk: int = 8):
+                    prefill_chunk: int = 8, disaggregate: bool = False):
     """Reduced-config real engines + matching pool profiles.
 
     ``prefill_chunk`` (prompt tokens per engine prefill tick, default 8 —
     recorded in ROADMAP conventions) cuts TTFT roughly by the chunk factor
-    on attention-cached layouts; recurrent/ring layouts clamp to 1."""
+    on attention-cached layouts; recurrent/ring layouts clamp to 1.
+
+    With ``disaggregate`` each member also gets a decode twin sharing the
+    primary's params (same weights, zero extra init cost beyond the twin's
+    KV cache); the scheduler runs the pair role-specialized with KV
+    migration at the phase boundary.  Returns ``(engines, pool,
+    decode_engines)`` — the twin dict is empty when disaggregation is off,
+    and layouts that can't migrate KV simply stay unified when attached."""
     engines: Dict[str, ModelEngine] = {}
+    decode_engines: Dict[str, ModelEngine] = {}
     profiles: List[ModelProfile] = []
     for i, arch in enumerate(arch_ids):
         cfg = get_config(arch, smoke=True,
@@ -49,7 +57,13 @@ def build_real_pool(arch_ids: List[str], max_batch: int = 4,
                           detokenize=tok.decode, prefill_chunk=prefill_chunk)
         engines[arch] = eng
         profiles.append(eng.profile)
-    return engines, ModelPool(profiles)
+        if disaggregate:
+            twin = ModelEngine(arch, cfg, jax.random.PRNGKey(seed + i),
+                               max_batch=max_batch, max_len=max_len,
+                               params=eng.params, detokenize=tok.decode,
+                               prefill_chunk=prefill_chunk, role="decode")
+            decode_engines[arch] = twin
+    return engines, ModelPool(profiles), decode_engines
 
 
 def exact_match_accuracy(query: Query, resp) -> float:
@@ -104,10 +118,17 @@ def main() -> None:
                          "featurize→score pipeline (kernels/featurize), "
                          "host = reference numpy path, auto = device on "
                          "TPU (elsewhere Pallas runs in interpret mode)")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="role-specialized serving: each member gets a "
+                         "decode twin (shared params); prompts prefill on "
+                         "the primary, KV migrates at the phase boundary, "
+                         "decode streams from the twin (layouts without a "
+                         "full-depth KV cache stay unified)")
     args = ap.parse_args()
 
-    engines, pool = build_real_pool(args.pool,
-                                    prefill_chunk=args.prefill_chunk)
+    engines, pool, decode_engines = build_real_pool(
+        args.pool, prefill_chunk=args.prefill_chunk,
+        disaggregate=args.disaggregate)
     config = RouterConfig(lam=args.lam, energy_scale_wh=0.05,
                           featurize=args.featurize)
     router = GreenServRouter(config, pool)
@@ -127,10 +148,14 @@ def main() -> None:
                         accuracy_fn=exact_match_accuracy,
                         telemetry=telemetry,
                         prefill_chunk=args.prefill_chunk,
-                        cache=cache)
+                        cache=cache,
+                        decode_engines=decode_engines or None)
     t0 = time.monotonic()
+    # continuous-batching drive: arrivals park in the scheduler's queue and
+    # are admitted into free prefill slots each tick (routing happens at
+    # admission, so the bandit sees the live queue state)
     for i, q in enumerate(queries):
-        server.submit(q)
+        server.enqueue(q)
         if args.fail_engine and i == len(queries) // 2:
             engines[args.fail_engine].inject_failure()
         server.step()
@@ -140,7 +165,8 @@ def main() -> None:
     counts = router.selection_counts()
     print(f"[serve] {len(server.responses)}/{len(queries)} queries in "
           f"{wall:.1f}s; restarts={server.stats['restarts']} "
-          f"hedges={server.stats['hedges']}")
+          f"hedges={server.stats['hedges']} "
+          f"migrations={server.stats['migrations']}")
     for name, c in zip(pool.names, counts):
         print(f"  {name:20s} selected {int(c):4d}×")
     total_wh = sum(r.energy_wh for r in server.responses.values())

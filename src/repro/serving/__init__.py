@@ -2,7 +2,8 @@
 from repro.serving.engine import (BaseEngine, EngineFailure, ModelEngine,
                                   SimEngine)
 from repro.serving.request import Request, RequestState, Response
-from repro.serving.scheduler import PoolServer
+from repro.serving.scheduler import LivelockError, PoolServer
 
 __all__ = ["BaseEngine", "EngineFailure", "ModelEngine", "SimEngine",
-           "Request", "RequestState", "Response", "PoolServer"]
+           "Request", "RequestState", "Response", "PoolServer",
+           "LivelockError"]

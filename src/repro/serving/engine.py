@@ -34,8 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.energy import (CostModelParams, EnergyMonitor, JOULES_PER_WH,
-                               decode_step_cost, energy_joules,
-                               prefill_chunk_cost, roofline)
+                               chunk_rider_cost, decode_step_cost,
+                               energy_joules, kv_migration_cost,
+                               prefill_chunk_cost, prefill_cost, roofline)
 from repro.core.types import ModelProfile
 from repro.models import api
 from repro.models.config import ModelConfig
@@ -51,6 +52,7 @@ class BaseEngine:
 
     name: str
     profile: ModelProfile
+    role: str = "unified"    # "prefill" | "decode" | "unified"
 
     def submit(self, req: Request) -> None:
         """Enqueue one routed request (admitted into a slot on a later step)."""
@@ -69,6 +71,40 @@ class BaseEngine:
     def pending(self) -> int:
         """Queued + in-slot request count (the scheduler's load signal)."""
         raise NotImplementedError
+
+    @property
+    def free_capacity(self) -> int:
+        """Slots the engine could admit into right now (continuous-batching
+        admission signal; 0 = saturated)."""
+        return max(0, 1 - self.pending)
+
+    # -- prefill/decode disaggregation hooks ----------------------------------
+
+    def set_role(self, role: str) -> None:
+        """Specialize the engine: a ``prefill`` engine hands requests off at
+        the phase boundary instead of decoding them; a ``decode`` engine
+        accepts those migrations.  Engines that can't export/import KV
+        (no full-depth positional cache) silently stay ``unified``."""
+
+    def drain_migrations(self) -> List[Request]:
+        """Requests that finished prefill this tick and carry a KV payload;
+        the scheduler moves them to the decode twin.  Draining empties the
+        outbox.  Always empty for unified/decode roles."""
+        return []
+
+    def submit_migrated(self, req: Request) -> None:
+        """Enqueue a migrated request (``req.kv_payload`` holds its prompt
+        KV); spliced into a slot on a later step, then decoded."""
+        raise NotImplementedError(f"{self.name} cannot accept migrations")
+
+    def modeled_time_s(self) -> float:
+        """Cumulative modeled wall-clock seconds of engine compute (per-tick
+        roofline ``t_step`` summed).  Virtual-clock benches diff this to
+        advance time by what the hardware would actually take — it is how
+        prefill/decode interference (chunk-padded mixed ticks) becomes
+        visible as TBT/TTFT inflation.  0.0 for engines without a roofline
+        model (SimEngine)."""
+        return 0.0
 
     def set_prefill_chunk(self, n: int) -> None:
         """Prompt tokens consumed per prefill tick (1 = token-wise legacy
@@ -131,7 +167,7 @@ class ModelEngine(BaseEngine):
     def __init__(self, name: str, cfg: ModelConfig, key: jax.Array,
                  max_batch: int = 4, max_len: int = 256,
                  params=None, detokenize: Optional[Callable] = None,
-                 prefill_chunk: int = 1):
+                 prefill_chunk: int = 1, role: str = "unified"):
         self.name = name
         self.cfg = dataclasses.replace(cfg, kv_update="where")
         self.max_batch = max_batch
@@ -170,6 +206,27 @@ class ModelEngine(BaseEngine):
         self.prefix_cache = None
         self._avoided_joules = 0.0
         self._prefix_hits = 0
+        # prefill/decode disaggregation (docs/SERVING.md): a "prefill"
+        # engine parks phase-boundary requests here for the scheduler to
+        # move to the decode twin
+        self.role = "unified"
+        self._migration_outbox: List[Request] = []
+        self._migration_joules = 0.0
+        self._modeled_time_s = 0.0
+        self.set_role(role)
+
+    def set_role(self, role: str) -> None:
+        """Pin the engine to one serving phase.  The same full-depth
+        positional-KV gate as chunked prefill applies: KV migration rides
+        device→host ``_capture_prefix``-style copies and ``splice_prefix``,
+        so recurrent (rwkv/mamba) and ring-buffer layouts silently fall
+        back to ``unified`` and keep both phases local."""
+        if role not in ("prefill", "decode", "unified"):
+            raise ValueError(f"unknown engine role {role!r}")
+        if role != "unified" and not (api.supports_chunked_prefill(self.cfg)
+                                      and "k" in self.cache):
+            role = "unified"
+        self.role = role
 
     def set_prefill_chunk(self, n: int) -> None:
         """Set the prompt tokens consumed per prefill tick and (re)build
@@ -243,9 +300,29 @@ class ModelEngine(BaseEngine):
         req.model_name = self.name
         self.queue.append(req)
 
+    def submit_migrated(self, req: Request) -> None:
+        """Accept a phase-boundary migration from the prefill twin.  The
+        request keeps its prompt cursor (fully fed), its first generated
+        token, and its stamped ``prefill_wh``; ``_admit`` splices the KV
+        payload into a slot and decode continues from there."""
+        self.queue.append(req)
+
+    def drain_migrations(self) -> List[Request]:
+        out, self._migration_outbox = self._migration_outbox, []
+        return out
+
+    def modeled_time_s(self) -> float:
+        return self._modeled_time_s
+
     @property
     def pending(self) -> int:
-        return len(self.queue) + sum(s is not None for s in self.slots)
+        return (len(self.queue) + len(self._migration_outbox)
+                + sum(s is not None for s in self.slots))
+
+    @property
+    def free_capacity(self) -> int:
+        return max(0, self.max_batch - len(self.queue)
+                   - sum(s is not None for s in self.slots))
 
     def _admit(self) -> None:
         for i in range(self.max_batch):
@@ -254,13 +331,32 @@ class ModelEngine(BaseEngine):
                 if req.state == RequestState.CANCELLED:
                     continue
                 req.slot = i
-                req.state = RequestState.PREFILL
-                req.start_s = time.monotonic()
                 self.slots[i] = req
                 # reset the slot's cache length so it starts fresh
                 self.cache["length"] = self.cache["length"].at[i].set(0)
+                if req.kv_payload is not None:
+                    self._splice_migration(i, req)
+                    continue
+                req.state = RequestState.PREFILL
+                req.start_s = time.monotonic()
                 if self.prefix_cache is not None:
                     self._splice_prefix(i, req)
+
+    def _splice_migration(self, slot: int, req: Request) -> None:
+        """Land a migrated request: splice its carried prompt KV into the
+        slot (cache length = prompt length, exactly the state the prefill
+        twin left behind) and charge the migration DMA to the prefill
+        ledger — it is phase-boundary overhead, not decode work."""
+        k_blk, v_blk = req.kv_payload
+        self.cache = api.splice_prefix(self.cache, slot, k_blk, v_blk)
+        req.kv_payload = None
+        req.state = RequestState.DECODE
+        f, b = kv_migration_cost(self.cost_params, req.kv_migrated)
+        terms = roofline(f, b, 0.0, self.energy.chips)
+        joules = energy_joules(terms)
+        self._migration_joules += joules
+        self._phase_joules["prefill"] += joules
+        self._modeled_time_s += terms.t_step
 
     def _splice_prefix(self, slot: int, req: Request) -> None:
         """Reuse the longest cached KV prefix for a newly admitted prompt.
@@ -354,7 +450,9 @@ class ModelEngine(BaseEngine):
                 tokens[i, 0] = (req.generated[-1] if req.generated
                                 else req.prompt_tokens[-1])
                 n_active[i] = 1
-                meter.append(("decode", 1, max(kv_start, 1)))
+                # decode rider in a mixed tick: its row is chunk-padded
+                # through the fused kernel (see chunk_rider_cost)
+                meter.append(("decode", 1, max(kv_start, 1), C))
         next_tok, self.cache = self._jit_chunk_step(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(n_active))
@@ -367,7 +465,10 @@ class ModelEngine(BaseEngine):
                        fed_prompt: List[int]) -> List[Response]:
         """Shared post-step bookkeeping: advance prompt cursors, record
         TTFT at the first generated token, append decode tokens, finish
-        on EOS / max_new_tokens / cache overflow."""
+        on EOS / max_new_tokens / cache overflow.  On a ``prefill``-role
+        engine, requests that survive the finish checks at the phase
+        boundary are handed to the migration outbox instead of decoding
+        locally."""
         finished: List[Response] = []
         now = time.monotonic()
         for i, req in enumerate(self.slots):
@@ -382,31 +483,102 @@ class ModelEngine(BaseEngine):
                     req.state = RequestState.DECODE
                     req.generated.append(int(next_tok[i]))
                     req.first_token_s = now
+                    # the first generated token gets the same finish checks
+                    # as any decode token — an EOS-first or 1-token-budget
+                    # request must not survive into decode (or migrate)
+                    if self._should_finish(i, req):
+                        finished.append(self._finish(i))
+                    elif self.role == "prefill":
+                        self._emit_migration(i, req)
                 continue
             req.generated.append(int(next_tok[i]))
-            hit_eos = req.generated[-1] == req.eos_id
-            full = len(req.generated) >= req.max_new_tokens
-            overflow = int(self.cache["length"][i]) >= self.max_len - 1
-            if hit_eos or full or overflow:
+            if self._should_finish(i, req):
                 finished.append(self._finish(i))
         return finished
+
+    def _should_finish(self, slot: int, req: Request) -> bool:
+        hit_eos = req.generated[-1] == req.eos_id
+        full = len(req.generated) >= req.max_new_tokens
+        overflow = int(self.cache["length"][slot]) >= self.max_len - 1
+        return hit_eos or full or overflow
+
+    def _emit_migration(self, slot: int, req: Request) -> None:
+        """Phase boundary on a prefill-role engine: snapshot the prompt KV
+        (device→host, the ``_capture_prefix`` transport), stamp the metered
+        prefill-phase Wh on the request, and free the slot for the next
+        arrival.  Prompts that overflowed the slot cache have unwritten KV
+        positions — nothing trustworthy to ship — so they stay local and
+        decode here (per-request unified fallback)."""
+        n_p = len(req.prompt_tokens)
+        if n_p > self.max_len - 1:
+            return
+        k = np.asarray(self.cache["k"][:, slot, :n_p])
+        v = np.asarray(self.cache["v"][:, slot, :n_p])
+        req.kv_payload = (k, v)
+        req.kv_migrated = n_p
+        req.prefill_wh = self._prefill_phase_wh(req)
+        req.state = RequestState.MIGRATING
+        req.slot = -1
+        self._migration_outbox.append(req)
+        self.slots[slot] = None
+
+    def _prefill_phase_wh(self, req: Request) -> float:
+        """The prefill share of the per-query Wh of record, stamped at
+        migration time by the engine that actually did the work.  Mirrors
+        ``_query_wh``'s split: cold prompts cost ``measure_query``'s
+        prefill term, spliced prompts only their uncached suffix.  The
+        spend is charged to this engine's monitor now — a later decode-twin
+        failure re-queues the request but never un-spends these joules."""
+        n_p = max(len(req.prompt_tokens), 1)
+        if req.prefix_reused > 0:
+            joules = self._prefill_joules(max(n_p - req.prefix_reused, 1),
+                                          kv_start=req.prefix_reused)
+        else:
+            f, b = prefill_cost(self.cost_params, n_p)
+            joules = energy_joules(roofline(f, b, 0.0, self.energy.chips))
+        self.energy.total_joules += joules
+        return joules / JOULES_PER_WH
 
     def _meter_step(self, fed) -> None:
         """Accumulate this tick's modeled energy from the analytic cost
         model, split by phase.  ``fed`` lists (phase, n_tokens, kv_len)
-        per live slot: prefill slabs are charged ``prefill_chunk_cost``
-        (one weight read amortized over the slab), decode tokens
-        ``decode_step_cost``.  This is the time-resolved counterpart of
-        ``measure_query`` (which stays the per-query Wh accounting of
-        record).  No device sync: kv lengths come from request progress,
-        not the cache."""
-        for phase, n_tokens, kv_len in fed:
+        per live slot — plus a 4th ``pad`` element for decode riders in
+        mixed chunk ticks: prefill slabs are charged
+        ``prefill_chunk_cost`` (one weight read amortized over the slab),
+        plain decode tokens ``decode_step_cost``, and padded riders
+        ``chunk_rider_cost`` (the fused chunk kernel computes all ``pad``
+        positions of the rider's row — the interference cost
+        role-specialized engines avoid).  This is the time-resolved
+        counterpart of ``measure_query`` (which stays the per-query Wh
+        accounting of record).  No device sync: kv lengths come from
+        request progress, not the cache.
+
+        The same per-slot terms also advance the modeled tick-time ledger:
+        one roofline ``t_step`` over the tick's aggregate FLOPs/bytes,
+        with the per-slot weight read collapsed to a single read — the
+        batched kernel streams the weights once per tick, so per-slot
+        energy charges keep the read (each slot's query really pays for
+        it) while tick *time* must not multiply it."""
+        tick_flops, tick_bytes = 0.0, 0.0
+        w_bytes = self.cost_params.n_active_params * self.cost_params.dtype_bytes
+        for entry in fed:
+            phase, n_tokens, kv_len = entry[:3]
+            pad = entry[3] if len(entry) > 3 else 0
             if phase == "prefill" and n_tokens > 1:
                 f, b = prefill_chunk_cost(self.cost_params, n_tokens, kv_len)
+            elif pad > 1:
+                f, b = chunk_rider_cost(self.cost_params, pad, max(kv_len, 1))
             else:
                 f, b = decode_step_cost(self.cost_params, max(kv_len, 1))
             self._phase_joules[phase] += energy_joules(
                 roofline(f, b, 0.0, self.energy.chips))
+            tick_flops += f
+            tick_bytes += b - w_bytes
+        if fed:
+            tick_bytes += w_bytes
+            self._modeled_time_s += roofline(
+                tick_flops, max(tick_bytes, 0.0), 0.0,
+                self.energy.chips).t_step
 
     def cumulative_joules(self) -> float:
         return self._phase_joules["prefill"] + self._phase_joules["decode"]
@@ -421,8 +593,11 @@ class ModelEngine(BaseEngine):
         req.state = RequestState.DONE
         req.finish_s = time.monotonic()
         out = [t for t in req.generated if t != req.eos_id]
-        energy_wh = self._query_wh(len(req.prompt_tokens),
-                                   req.prefix_reused, len(out))
+        if req.kv_migrated and req.prefill_wh > 0:
+            energy_wh = self._migrated_query_wh(req, len(out))
+        else:
+            energy_wh = self._query_wh(len(req.prompt_tokens),
+                                       req.prefix_reused, len(out))
         ttft_ms = ((req.first_token_s - req.submit_s) * 1e3
                    if req.first_token_s else 0.0)
         return Response(
@@ -431,7 +606,8 @@ class ModelEngine(BaseEngine):
             queue_ms=(req.start_s - req.submit_s) * 1e3,
             energy_wh=energy_wh, input_tokens=len(req.prompt_tokens),
             output_tokens=len(out), hedged_winner=req.hedged,
-            ttft_ms=ttft_ms, prefix_reused=req.prefix_reused)
+            ttft_ms=ttft_ms, prefix_reused=req.prefix_reused,
+            kv_migrated=req.kv_migrated)
 
     def _query_wh(self, n_prompt: int, reused: int, n_out: int) -> float:
         """Per-query Wh of record.  Cold queries keep ``measure_query``
@@ -455,6 +631,24 @@ class ModelEngine(BaseEngine):
         self.energy.n_queries += 1
         return joules / JOULES_PER_WH
 
+    def _migrated_query_wh(self, req: Request, n_out: int) -> float:
+        """Per-query Wh of record for a request that prefilled elsewhere:
+        the prefill twin's stamped ``prefill_wh`` + this engine's decode
+        work at full context depth + the phase-boundary KV DMA.  Decode is
+        charged here (mirroring ``_query_wh``'s mid-depth decode term);
+        the prefill term was already charged to the twin's monitor at
+        migration time."""
+        n_prompt = len(req.prompt_tokens)
+        mid_kv = n_prompt + max(n_out, 1) // 2
+        f, b = decode_step_cost(self.cost_params, mid_kv)
+        joules = max(n_out, 0) * energy_joules(
+            roofline(f, b, 0.0, self.energy.chips))
+        f, b = kv_migration_cost(self.cost_params, req.kv_migrated)
+        joules += energy_joules(roofline(f, b, 0.0, self.energy.chips))
+        self.energy.total_joules += joules
+        self.energy.n_queries += 1
+        return joules / JOULES_PER_WH + req.prefill_wh
+
     def _capture_prefix(self, slot: int, req: Request) -> None:
         """Register a finished prompt's KV with the prefix cache.  The
         prompt region [0, n_prompt) of the slot cache is still intact at
@@ -475,7 +669,8 @@ class ModelEngine(BaseEngine):
         self.prefix_cache.insert(req.prompt_tokens, k, v)
 
     def restart(self) -> List[Request]:
-        inflight = [r for r in self.slots if r is not None] + self.queue
+        inflight = ([r for r in self.slots if r is not None]
+                    + self.queue + self._migration_outbox)
         for r in inflight:
             r.state = RequestState.QUEUED
             r.slot = -1
@@ -483,8 +678,14 @@ class ModelEngine(BaseEngine):
             r.n_prompt_fed = 0
             r.prefix_reused = 0          # re-splices on re-admission
             r.first_token_s = 0.0
+            # drop any in-transit KV: it is re-prefilled from scratch, and
+            # the twin's already-charged joules stay spent (never refunded)
+            r.kv_payload = None
+            r.kv_migrated = 0
+            r.prefill_wh = 0.0
         self.slots = [None] * self.max_batch
         self.queue = []
+        self._migration_outbox = []
         self.cache = api.init_cache(self.cfg, self.max_batch, self.max_len)
         self._failed = False
         return inflight

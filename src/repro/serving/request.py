@@ -12,6 +12,7 @@ from repro.core.types import Query
 class RequestState(enum.Enum):
     QUEUED = "queued"
     PREFILL = "prefill"      # prompt tokens streaming into the cache
+    MIGRATING = "migrating"  # prompt KV in transit prefill→decode engine
     DECODE = "decode"        # generating
     DONE = "done"
     FAILED = "failed"
@@ -42,6 +43,12 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     n_prompt_fed: int = 0
     prefix_reused: int = 0   # prompt tokens spliced from the prefix-KV cache
+    # --- prefill→decode disaggregation (docs/SERVING.md) ---
+    # (k, v) numpy blocks captured on the prefill engine at phase boundary,
+    # carried by the scheduler to the decode twin, cleared after splice
+    kv_payload: Optional[tuple] = None
+    kv_migrated: int = 0     # prompt-KV tokens moved between engines
+    prefill_wh: float = 0.0  # metered prefill-phase Wh, stamped at migration
     # (task_label, cluster, embedding) computed once by the scheduler's
     # cache probe; reused at completion for the semantic insert
     cache_features: Optional[tuple] = None
@@ -93,3 +100,4 @@ class Response:
     hedged_winner: bool = False
     ttft_ms: float = 0.0     # time to first generated token (0 = unknown)
     prefix_reused: int = 0   # prompt tokens served from the prefix-KV cache
+    kv_migrated: int = 0     # prompt-KV tokens moved prefill→decode engine

@@ -40,6 +40,13 @@ from repro.serving.engine import BaseEngine, EngineFailure
 from repro.serving.request import Request, RequestState, Response
 
 
+class LivelockError(TimeoutError):
+    """``run_until_drained`` exhausted its step budget with live requests —
+    the continuous-batching loop stopped making progress (a bug), or the
+    budget is simply too small for the workload.  Subclasses TimeoutError
+    so callers treating drain exhaustion as a timeout keep working."""
+
+
 class PoolServer:
     """The GreenServ scheduler: routes queries, steps engines, closes the
     bandit loop.  ``hedge_after_steps`` is measured in scheduler steps
@@ -59,13 +66,18 @@ class PoolServer:
                  accuracy_fn: Optional[Callable] = None,
                  telemetry: Optional["Telemetry"] = None,
                  prefill_chunk: Optional[int] = None,
-                 cache: Optional["GreenCache"] = None):
+                 cache: Optional["GreenCache"] = None,
+                 decode_engines: Optional[Dict[str, BaseEngine]] = None):
         names = router.pool.names
         missing = [n for n in names if n not in engines]
         if missing:
             raise ValueError(f"engines missing for pool members: {missing}")
         self.router = router
         self.engines = engines
+        # prefill/decode disaggregation: primary-name → decode twin.  The
+        # primary becomes the prefill-role engine; requests migrate to the
+        # twin at phase boundary (docs/SERVING.md "Disaggregated serving")
+        self.decode_engines: Dict[str, BaseEngine] = {}
         self.tokenizer = tokenizer or (lambda text: [1 + (ord(c) % 250)
                                                      for c in text[:32]])
         self.hedge_after_steps = hedge_after_steps
@@ -85,40 +97,100 @@ class PoolServer:
         self.hedges: Dict[int, Request] = {}
         self.responses: Dict[int, Response] = {}
         self.wait_steps: Dict[int, int] = {}
+        # continuous-batching arrivals queue: ``enqueue``d queries wait
+        # here until a step() tick has free prefill capacity for them
+        self.arrivals: List[Query] = []
         self.stats = {"hedges": 0, "restarts": 0, "completed": 0,
-                      "cache_hits": 0}
+                      "cache_hits": 0, "migrations": 0}
         # feedback for completions collected during the current step(); the
         # router is updated once per step via feedback_batch
         self._fb_buffer: List[Feedback] = []
+        for name, twin in (decode_engines or {}).items():
+            self.attach_decode_engine(name, twin)
 
     # -- pool growth (paper §6.3.4) ---------------------------------------------
 
     def _configure_engine(self, name: str, engine: BaseEngine,
-                          initial: bool = False) -> None:
+                          initial: bool = False,
+                          role: Optional[str] = None) -> None:
         """Apply *every* pool-level serving setting to one engine — the
         single choke point used at construction and by ``add_engine``, so
         a late joiner can never silently miss a knob (prefill chunking,
-        its prefix-KV cache handle, telemetry pre-binding)."""
+        its prefix-KV cache handle, its phase role, telemetry
+        pre-binding).  ``name`` is the telemetry display key (a decode
+        twin shows up as ``<primary>#decode``); the prefix cache is keyed
+        by the *model* name so twins share one cache (they share params —
+        the KV blocks are interchangeable)."""
         if self.prefill_chunk is not None:
             engine.set_prefill_chunk(self.prefill_chunk)
         if self.cache is not None:
-            engine.set_prefix_cache(self.cache.prefix_for(name))
+            model_name = name.split("#", 1)[0]
+            engine.set_prefix_cache(self.cache.prefix_for(model_name))
+        if role is not None:
+            engine.set_role(role)
         if self.telemetry is not None:
             self.telemetry.on_engine_added(name, engine, initial=initial)
 
-    def add_engine(self, profile: ModelProfile, engine: BaseEngine) -> None:
+    def add_engine(self, profile: ModelProfile, engine: BaseEngine,
+                   decode_engine: Optional[BaseEngine] = None) -> None:
         """Zero-calibration model addition: new engine + fresh bandit arm.
         Every server-level setting (``prefill_chunk``, cache handles,
-        telemetry hooks) applies to late joiners via _configure_engine."""
+        telemetry hooks) applies to late joiners via _configure_engine.
+        Pass ``decode_engine`` to register the member disaggregated from
+        the start (the twin must share the primary's params)."""
         self._configure_engine(profile.name, engine)
         self.engines[profile.name] = engine
         self.router.pool.add(profile)   # fires the router's add-arm hook
+        if decode_engine is not None:
+            self.attach_decode_engine(profile.name, decode_engine)
+
+    def attach_decode_engine(self, name: str, twin: BaseEngine) -> None:
+        """Disaggregate pool member ``name``: the existing engine becomes
+        the prefill-role engine and ``twin`` (sharing its params) takes
+        the decode phase via KV migration.  Layouts without a full-depth
+        positional KV cache can't export/import KV — ``set_role`` falls
+        back to ``unified`` there, and the twin is not registered (the
+        member keeps serving both phases on one engine)."""
+        if name not in self.engines:
+            raise KeyError(f"no pool member named {name!r}")
+        primary = self.engines[name]
+        primary.set_role("prefill")
+        if primary.role != "prefill":       # unified fallback (e.g. rwkv)
+            return
+        self._configure_engine(f"{name}#decode", twin, role="decode")
+        self.decode_engines[name] = twin
 
     # -- submission ---------------------------------------------------------------
 
     def submit(self, query: Query) -> Request:
         """Route and enqueue one query (a batch of one; tools/demos)."""
         return self.submit_batch([query])[0]
+
+    def enqueue(self, query: Query) -> None:
+        """Continuous-batching entry point: park an arrival until a
+        ``step()`` tick has free prefill capacity for it.  Unlike
+        ``submit``, routing is deferred to admission time — the bandit
+        sees the queue state that actually exists when the query gets a
+        slot, and a burst never floods engine queues beyond what the
+        slots can absorb."""
+        self.arrivals.append(query)
+
+    def enqueue_many(self, queries: Sequence[Query]) -> None:
+        self.arrivals.extend(queries)
+
+    def _admit_arrivals(self) -> None:
+        """Admit as many parked arrivals as the pool has free slots this
+        tick (FIFO).  Capacity is summed over the routable (prefill-side)
+        engines only — decode twins receive work through migration, never
+        admission.  Admitted queries go through the normal batched
+        ``submit_batch`` hot path (cache probe → route_batch → slices)."""
+        if not self.arrivals:
+            return
+        free = sum(e.free_capacity for e in self.engines.values())
+        if free <= 0:
+            return
+        batch, self.arrivals = self.arrivals[:free], self.arrivals[free:]
+        self.submit_batch(batch)
 
     def submit_batch(self, queries: Sequence[Query]) -> List[Request]:
         """Admit a batch: cache consultation, then one ``route_batch`` call
@@ -293,13 +365,18 @@ class PoolServer:
             stalled = now - eng.heartbeat() > self.heartbeat_timeout_s
             if stalled or getattr(eng, "_failed", False):
                 self._restart_engine(name)
+        for name, twin in self.decode_engines.items():
+            stalled = now - twin.heartbeat() > self.heartbeat_timeout_s
+            if stalled or getattr(twin, "_failed", False):
+                self._restart_engine(name, decode=True)
 
-    def _restart_engine(self, name: str) -> None:
-        eng = self.engines[name]
+    def _restart_engine(self, name: str, decode: bool = False) -> None:
+        eng = self.decode_engines[name] if decode else self.engines[name]
         inflight = eng.restart()
         self.stats["restarts"] += 1
         if self.telemetry is not None:
-            self.telemetry.on_restart(name, len(inflight))
+            self.telemetry.on_restart(f"{name}#decode" if decode else name,
+                                      len(inflight))
         # flush buffered feedback first so re-routing sees the updated
         # bandit, and so no pending decision consumed by the flush is
         # overwritten by the re-route below
@@ -390,13 +467,17 @@ class PoolServer:
     # -- main loop ---------------------------------------------------------------------
 
     def step(self) -> List[Response]:
-        """One scheduler tick: health checks, hedging, one ``step()`` per
-        engine (each engine tick is one jitted chunk-prefill or decode
-        call), one batched feedback flush, one telemetry/governor step.
-        Returns the responses completed this tick."""
+        """One scheduler tick: health checks, hedging, arrival admission
+        into free prefill slots, one ``step()`` per engine (each engine
+        tick is one jitted chunk-prefill or decode call, prefill-side
+        engines first so a phase boundary migrates the same tick it is
+        reached), the migration pump, one batched feedback flush, one
+        telemetry/governor step.  Returns the responses completed this
+        tick."""
         done: List[Response] = []
         self._check_engines()
         self._maybe_hedge()
+        self._admit_arrivals()
         for name, eng in self.engines.items():
             try:
                 for resp in eng.step():
@@ -406,6 +487,16 @@ class PoolServer:
                         done.append(resp)
             except EngineFailure:
                 self._restart_engine(name)
+        for name, twin in self.decode_engines.items():
+            try:
+                for resp in twin.step():
+                    req = self._find_request(resp.uid, name)
+                    if req is not None:
+                        self._complete(resp, req)
+                        done.append(resp)
+            except EngineFailure:
+                self._restart_engine(name, decode=True)
+        self._pump_migrations()
         self._flush_feedback()
         for uid, req in self.inflight.items():
             if req.state == RequestState.QUEUED:
@@ -413,8 +504,47 @@ class PoolServer:
         # telemetry last: power samples see the step's energy, and the
         # governor's λ adjustment lands after this step's feedback flush
         if self.telemetry is not None:
-            self.telemetry.on_step(self.engines)
+            self.telemetry.on_step(self._all_engines())
         return done
+
+    def _all_engines(self) -> Dict[str, BaseEngine]:
+        """Telemetry view of the pool: primaries under their model name,
+        decode twins under ``<name>#decode``."""
+        if not self.decode_engines:
+            return self.engines
+        view = dict(self.engines)
+        for name, twin in self.decode_engines.items():
+            view[f"{name}#decode"] = twin
+        return view
+
+    def _pump_migrations(self) -> None:
+        """Move phase-boundary requests from each prefill-role engine's
+        outbox into its decode twin's queue.  Runs after engine stepping,
+        so a prefill that completes at tick t starts decoding at t+1 —
+        the one-tick handoff is the (honest) migration latency.  If the
+        twin vanished mid-flight the request re-prefills on the primary
+        (payload dropped); nothing is ever lost."""
+        for name, eng in self.engines.items():
+            if eng.role != "prefill":
+                continue
+            twin = self.decode_engines.get(name)
+            for req in eng.drain_migrations():
+                if req.state == RequestState.CANCELLED:
+                    continue
+                if twin is None:
+                    req.kv_payload = None
+                    req.kv_migrated = 0
+                    req.prefill_wh = 0.0
+                    req.state = RequestState.QUEUED
+                    req.generated = []
+                    req.n_prompt_fed = 0
+                    req.prefix_reused = 0
+                    eng.submit(req)
+                    continue
+                twin.submit_migrated(req)
+                self.stats["migrations"] += 1
+                if self.telemetry is not None:
+                    self.telemetry.on_migration(name, req.kv_migrated)
 
     def _find_request(self, uid: int, engine_name: str) -> Optional[Request]:
         req = self.inflight.get(uid)
@@ -426,9 +556,17 @@ class PoolServer:
         return req
 
     def run_until_drained(self, max_steps: int = 100_000) -> None:
-        """Step until no request is in flight (or raise after max_steps)."""
+        """Step until nothing is in flight *and* no arrival is parked.
+        Raises ``LivelockError`` (a ``TimeoutError``) if the step budget
+        runs out with live work — a silent return here would mask a
+        scheduler livelock, which the continuous loop must never hide."""
         for _ in range(max_steps):
-            if not self.inflight:
+            if not self.inflight and not self.arrivals:
                 return
             self.step()
-        raise TimeoutError(f"{len(self.inflight)} requests still in flight")
+        if not self.inflight and not self.arrivals:
+            return      # the budget's last step drained the pool
+        raise LivelockError(
+            f"{len(self.inflight)} request(s) still in flight and "
+            f"{len(self.arrivals)} arrival(s) still parked after "
+            f"{max_steps} steps")

@@ -112,6 +112,11 @@ class EnergyBudgetGovernor:
         # decode, fed per step by Telemetry.on_step from the engines'
         # phase-tagged joule counters
         self.phase_wh = {"prefill": 0.0, "decode": 0.0}
+        # role ledger (Wh): the same burn keyed by *engine role* (unified /
+        # prefill / decode).  Under disaggregated serving this is the
+        # per-role energy attribution the bench reads; an all-unified pool
+        # books everything under "unified"
+        self.role_wh = {"unified": 0.0, "prefill": 0.0, "decode": 0.0}
         # GreenCache credit ledger (Wh): energy the cache *avoided*
         # spending (prefix-KV splices, semantic answers).  Avoided energy
         # earns bucket credit — work the budget no longer has to fund —
@@ -184,6 +189,15 @@ class EnergyBudgetGovernor:
         long-prompt traffic or long generations."""
         self.phase_wh["prefill"] += max(prefill_wh, 0.0)
         self.phase_wh["decode"] += max(decode_wh, 0.0)
+
+    def on_role_energy(self, role: str, energy_wh: float) -> None:
+        """Attribute a step's metered energy (Wh delta) to the reporting
+        engine's *role* — a second ledger view next to the phase split.
+        Phases say what kind of work burned the joules; roles say which
+        class of engine did, which is what disaggregated serving needs to
+        size its prefill vs decode fleets."""
+        self.role_wh[role] = self.role_wh.get(role, 0.0) \
+            + max(energy_wh, 0.0)
 
     def on_completion(self, energy_wh: float, t_s: float = 0.0) -> None:
         """Drain the bucket by a completion's measured energy; in query-
@@ -317,6 +331,7 @@ class EnergyBudgetGovernor:
             "exhausted": self.exhausted,
             "prefill_wh": self.phase_wh["prefill"],
             "decode_wh": self.phase_wh["decode"],
+            "role_wh": dict(self.role_wh),
             "avoided_prefix_wh": self.avoided_wh["prefix"],
             "avoided_semantic_wh": self.avoided_wh["semantic"],
         }

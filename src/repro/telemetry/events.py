@@ -19,6 +19,7 @@ RESTART = "restart"
 LAMBDA = "lambda"           # governor changed the router's λ
 CACHE_HIT = "cache_hit"     # GreenCache answered/shortened a query
 ENGINE_ADDED = "engine_added"   # pool grew at runtime (add_engine)
+MIGRATE = "migrate"         # prompt KV handed prefill→decode engine
 
 
 class Event(NamedTuple):

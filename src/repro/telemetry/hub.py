@@ -103,6 +103,14 @@ class Telemetry:
         self._prefix_avoided_last = 0.0
         self._prefix_hits_last = 0
         self._avoided_cum_joules = 0.0
+        # disaggregated serving: KV migrations (per prefill engine) and
+        # per-engine cumulative joules for the role-attribution diff
+        self._migrations: Dict[str, Counter] = {}
+        self._role_energy = {
+            role: r.counter("greenserv_energy_joules_total", {"role": role},
+                            help="pool-wide metered joules by engine role")
+            for role in ("unified", "prefill", "decode")}
+        self._engine_joules_last: Dict[str, float] = {}
 
     # -- scheduler hooks ----------------------------------------------------
 
@@ -193,6 +201,17 @@ class Telemetry:
         self._hedges.inc()
         self.events.emit(ev.HEDGE, self.clock(), uid=uid, target=target)
 
+    def on_migration(self, engine: str, n_tokens: int) -> None:
+        """A request's prompt KV was handed from ``engine`` (prefill role)
+        to its decode twin at the phase boundary."""
+        c = self._migrations.get(engine)
+        if c is None:
+            c = self._migrations[engine] = self.registry.counter(
+                "greenserv_migrations_total", {"engine": engine})
+        c.inc()
+        self.events.emit(ev.MIGRATE, self.clock(), engine=engine,
+                         kv_tokens=n_tokens)
+
     def on_restart(self, engine: str, n_requeued: int) -> None:
         c = self._restarts.get(engine)
         if c is None:
@@ -217,6 +236,20 @@ class Telemetry:
                 "decode", 0.0)
             phase_tot["prefill"] += phases.get("prefill", 0.0)
             phase_tot["decode"] += phases.get("decode", 0.0)
+            # role attribution: the same joules, keyed by which *class* of
+            # engine burned them (all-unified pools book under "unified")
+            role = getattr(eng, "role", "unified")
+            d_role = joules[name] - self._engine_joules_last.get(name, 0.0)
+            if d_role > 0.0:
+                self._role_energy.setdefault(
+                    role, self.registry.counter(
+                        "greenserv_energy_joules_total", {"role": role},
+                        help="pool-wide metered joules by engine role")
+                ).inc(d_role)
+                if self.governor is not None:
+                    self.governor.on_role_energy(role,
+                                                 d_role / JOULES_PER_WH)
+            self._engine_joules_last[name] = joules[name]
             # getattr: duck-typed engines (tests, adapters) may predate
             # the avoided-energy surface
             prefix_avoided += getattr(eng, "cumulative_joules_avoided",

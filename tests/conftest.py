@@ -18,6 +18,11 @@ def pytest_configure(config):
         "markers",
         "cache: GreenCache prefix-KV / semantic caching tests "
         "(run the subset with -m cache)")
+    config.addinivalue_line(
+        "markers",
+        "disagg: disaggregated prefill/decode serving tests — migration "
+        "correctness, fault injection, unified equivalence "
+        "(run the subset with -m disagg)")
 
 
 @pytest.fixture(scope="session")
