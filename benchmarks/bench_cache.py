@@ -34,6 +34,7 @@ higher than the blind run's.
 from __future__ import annotations
 
 import argparse
+import json
 import random
 from typing import Dict, List, Optional, Tuple
 
@@ -134,6 +135,7 @@ def drive(arch_ids: List[str], queries: List[Query], arrivals: List[float],
     submit_step: Dict[int, int] = {}
     ttft_steps: Dict[int, int] = {}
     trace: List[Tuple[float, float, float]] = []   # (t, λ, cumulative J)
+    traj: List[dict] = []       # BENCH_cache.json trajectory samples
     while i < len(queries) or server.inflight:
         due = []
         while i < len(queries) and arrivals[i] <= clk["t"]:
@@ -150,8 +152,14 @@ def drive(arch_ids: List[str], queries: List[Query], arrivals: List[float],
         clk["t"] += dt_s
         lam_now = (governor.current_lambda if governor is not None
                    else router.config.lam) or router.config.lam
-        trace.append((clk["t"], lam_now,
-                      sum(e.cumulative_joules() for e in engines.values())))
+        joules_now = sum(e.cumulative_joules() for e in engines.values())
+        trace.append((clk["t"], lam_now, joules_now))
+        if step % 8 == 0:
+            traj.append({"t_s": round(clk["t"], 6),
+                         "completed": len(server.responses),
+                         "joules": round(joules_now, 6),
+                         "inflight": len(server.inflight)
+                         + len(server.arrivals)})
         for uid, req in server.inflight.items():
             if req.generated and uid not in ttft_steps:
                 ttft_steps[uid] = step - submit_step[uid]
@@ -177,6 +185,7 @@ def drive(arch_ids: List[str], queries: List[Query], arrivals: List[float],
         "governor": governor,
         "cache_stats": cs,
         "trace": trace,
+        "trajectory": traj,
         "day_s": day_s,
         # what the governor actually meters: per-completion response Wh
         "response_wh": sum(r.energy_wh for r in server.responses.values()),
@@ -202,7 +211,8 @@ def _half_day_stats(result: dict) -> Tuple[float, float, float]:
 
 def main(n_queries: int = 120, arch_ids: Optional[List[str]] = None,
          smoke: bool = False, out: Optional[str] = None,
-         seed: int = 0) -> List[str]:
+         seed: int = 0,
+         artifact: Optional[str] = "BENCH_cache.json") -> List[str]:
     arch_ids = arch_ids or (["granite-3-8b"] if smoke
                             else ["granite-3-8b", "qwen2-moe-a2.7b"])
     queries, arrivals = make_workload(n_queries, seed=seed)
@@ -280,6 +290,29 @@ def main(n_queries: int = 120, arch_ids: Optional[List[str]] = None,
             f"carbon-aware dirty-half spend {frac_carbon:.1%} exceeds "
             f"carbon-blind {frac_blind:.1%}")
 
+    if artifact:
+        # trajectory artifact (BENCH_disagg.json's schema) so perf/energy
+        # regressions diff across PRs
+        runs_json = {
+            mode: {"mode": mode,
+                   "joules": r["joules"],
+                   "ttft_steps_mean": r["ttft_steps_mean"],
+                   "prefix_hits": int(r["prefix_hits"]),
+                   "semantic_hits": int(r["semantic_hits"]),
+                   "avoided_joules": r["avoided_joules"],
+                   "completed": r["completed"],
+                   "steps": r["steps"],
+                   "response_wh": r["response_wh"],
+                   "trajectory": r["trajectory"]}
+            for mode, r in results.items()}
+        with open(artifact, "w") as f:
+            json.dump({"bench": "cache",
+                       "n_queries": n_queries,
+                       "seed": seed,
+                       "headline": {"joule_reduction_full": reduction},
+                       "runs": runs_json}, f, indent=1, sort_keys=True)
+        lines.append(f"artifact,path,{artifact}")
+
     if out:
         tel = full["telemetry"]
         n = dump_jsonl(out, tel.registry, tel.power, tel.events,
@@ -302,8 +335,10 @@ if __name__ == "__main__":
     ap.add_argument("--queries", type=int, default=None)
     ap.add_argument("--out", default=None,
                     help="JSONL metrics dump path (CI artifact)")
+    ap.add_argument("--artifact", default="BENCH_cache.json",
+                    help="trajectory artifact path ('' disables)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     n = args.queries or (36 if args.smoke else 120)
     print("\n".join(main(n_queries=n, smoke=args.smoke, out=args.out,
-                         seed=args.seed)))
+                         seed=args.seed, artifact=args.artifact or None)))

@@ -1,7 +1,9 @@
 """Paper Table 1 (§6.3.6): RouterBench-style offline validation + AIQ."""
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+import argparse
+import json
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -12,9 +14,10 @@ from repro.data.routerbench import aiq, build_table, query_text
 
 
 def run_algorithm(algorithm: str, wtps=(0.0, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0),
-                  n_per_task: int = 400, seed: int = 0
-                  ) -> Tuple[float, float, float]:
-    """Returns (AIQ, peak accuracy, mean accuracy across WTP sweep)."""
+                  n_per_task: int = 400, seed: int = 0) -> dict:
+    """Scorecard for one bandit algorithm across the WTP sweep: AIQ, peak
+    and mean accuracy, plus the per-WTP (cost, accuracy) frontier points
+    as the trajectory the BENCH artifact diffs across PRs."""
     table = build_table(n_per_task=n_per_task, seed=seed)
     cost_scale = float(np.percentile(table.cost, 90))
     points, accs = [], []
@@ -45,20 +48,53 @@ def run_algorithm(algorithm: str, wtps=(0.0, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0),
         points.append((cost_sum / table.n_queries,
                        acc_sum / table.n_queries))
         accs.append(acc_sum / table.n_queries)
-    return aiq(points), float(np.max(accs)), float(np.mean(accs))
+    return {
+        "aiq": aiq(points),
+        "peak_acc": float(np.max(accs)),
+        "avg_acc": float(np.mean(accs)),
+        "n_queries": int(table.n_queries),
+        "trajectory": [{"wtp": float(w), "cost_per_query": float(c),
+                        "accuracy": float(a)}
+                       for w, (c, a) in zip(wtps, points)],
+    }
 
 
-def main(n_per_task: int = 150) -> List[str]:
+def main(n_per_task: int = 150, seed: int = 0,
+         artifact: Optional[str] = "BENCH_routerbench.json") -> List[str]:
     lines = ["algorithm,AIQ,peak_acc,avg_acc"]
+    runs: Dict[str, dict] = {}
     for name, algo in [("greenserv-linucb", "linucb"),
                        ("ctx-eps-greedy", "eps_greedy_ctx"),
                        ("thompson", "cts")]:
-        a, peak, avg = run_algorithm(algo, n_per_task=n_per_task)
-        lines.append(f"{name},{a:.3f},{100*peak:.1f}%,{100*avg:.1f}%")
+        r = run_algorithm(algo, n_per_task=n_per_task, seed=seed)
+        runs[name] = r
+        lines.append(f"{name},{r['aiq']:.3f},{100 * r['peak_acc']:.1f}%,"
+                     f"{100 * r['avg_acc']:.1f}%")
     lines.append("# paper Table 1: GreenServ AIQ 0.607 / peak 75.7% / "
                  "avg 71.7%")
+    if artifact:
+        # frontier-trajectory artifact (BENCH_disagg.json's schema) so
+        # AIQ/frontier regressions diff across PRs
+        gs = runs["greenserv-linucb"]
+        with open(artifact, "w") as f:
+            json.dump({"bench": "routerbench",
+                       "n_queries": gs["n_queries"],
+                       "seed": seed,
+                       "headline": {"greenserv_aiq": gs["aiq"],
+                                    "greenserv_peak_acc": gs["peak_acc"],
+                                    "greenserv_avg_acc": gs["avg_acc"]},
+                       "runs": runs}, f, indent=1, sort_keys=True)
+        lines.append(f"artifact,path,{artifact}")
     return lines
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--per-task", type=int, default=150,
+                    help="RouterBench queries per task family")
+    ap.add_argument("--artifact", default="BENCH_routerbench.json",
+                    help="trajectory artifact path ('' disables)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print("\n".join(main(n_per_task=args.per_task, seed=args.seed,
+                         artifact=args.artifact or None)))

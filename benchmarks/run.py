@@ -22,7 +22,8 @@ def main() -> None:
     t_start = time.time()
 
     from benchmarks import (bench_baselines, bench_cache, bench_disagg,
-                            bench_features, bench_kernels, bench_lambda_sweep,
+                            bench_energy_model, bench_features,
+                            bench_kernels, bench_lambda_sweep,
                             bench_model_addition, bench_overhead,
                             bench_prefill, bench_routerbench,
                             bench_telemetry, roofline)
@@ -66,6 +67,10 @@ def main() -> None:
     section("Disaggregated serving: tail TTFT + joules vs monolithic",
             lambda: bench_disagg.main(n_users=240 if args.fast else 2000,
                                       smoke=args.fast, artifact=None))
+    section("Energy cost model: forecast MAE + routing non-regression",
+            lambda: bench_energy_model.main(
+                n_queries=48 if args.fast else 120, smoke=args.fast,
+                artifact=None))
     section("Kernels: allclose + ref timing", bench_kernels.main)
     section("Roofline table (from dry-run records)",
             lambda: roofline.table("experiments/dryrun"))

@@ -346,15 +346,38 @@ def count_syllables(word: str) -> int:
     return max(n, 1)
 
 
+def flesch_counts(text: str) -> Tuple[int, int, int]:
+    """(words, sentences, syllables) — the integer sufficient statistics
+    of Eq. 11.  The string/regex work stays on host; the (cheap) score
+    arithmetic can then run wherever the bins are consumed — the fused
+    device pipeline computes score+bin from these counts with the exact
+    float32 op order of ``flesch_score_from_counts``.  Sentences are
+    clamped to >= 1 so the ratio is always defined."""
+    words = tokenize(text)
+    sentences = max(len([s for s in _SENT_SPLIT.split(text) if s.strip()]),
+                    1)
+    syllables = sum(count_syllables(w) for w in words)
+    return len(words), sentences, syllables
+
+
+def flesch_score_from_counts(n_words: int, n_sentences: int,
+                             n_syllables: int) -> float:
+    """Eq. 11 from the counts, in float32 with a fixed op order — the
+    single arithmetic spec both the host reference path and the device
+    pipeline implement, so host/device bins agree bitwise.  Zero words
+    (empty/punctuation-only text) scores 100.0 (trivially simple)."""
+    if n_words == 0:
+        return 100.0
+    ws = np.float32(n_words) / np.float32(n_sentences)
+    sw = np.float32(n_syllables) / np.float32(n_words)
+    score = (np.float32(206.835) - np.float32(1.015) * ws
+             - np.float32(84.6) * sw)
+    return float(np.clip(score, np.float32(0.0), np.float32(100.0)))
+
+
 def flesch_reading_ease(text: str) -> float:
     """Eq. 11; clamped to [0, 100] as the paper bins in that range."""
-    words = tokenize(text)
-    if not words:
-        return 100.0
-    sentences = max(len([s for s in _SENT_SPLIT.split(text) if s.strip()]), 1)
-    syllables = sum(count_syllables(w) for w in words)
-    score = 206.835 - 1.015 * (len(words) / sentences) - 84.6 * (syllables / len(words))
-    return float(np.clip(score, 0.0, 100.0))
+    return flesch_score_from_counts(*flesch_counts(text))
 
 
 class FleschComplexity:
@@ -366,12 +389,19 @@ class FleschComplexity:
         self.n_bins = n_bins
         self.lo, self.hi = lo, hi
 
+    @property
+    def bin_width32(self) -> np.float32:
+        """Equal-bin width in float32 — the scalar the device binning
+        stage consumes (must match ``bin``'s arithmetic exactly)."""
+        return np.float32(self.hi - self.lo) / np.float32(self.n_bins)
+
     def score(self, text: str) -> float:
         return flesch_reading_ease(text)
 
     def bin(self, score: float) -> int:
-        width = (self.hi - self.lo) / self.n_bins
-        b = int((score - self.lo) / width)
+        # float32 with int truncation toward zero — mirrored by the device
+        # pipeline's (score - lo) / width → int32 cast
+        b = int((np.float32(score) - np.float32(self.lo)) / self.bin_width32)
         return int(np.clip(b, 0, self.n_bins - 1))
 
     def __call__(self, text: str) -> Tuple[float, int]:
@@ -492,16 +522,20 @@ class ContextGenerator:
         (``RouterConfig.featurize`` toggle; "auto" = accelerator only)."""
         return self.config.resolve_featurize_device()
 
-    def complexity_batch(self, texts: Sequence[str]
-                         ) -> Tuple[List[Tuple[float, int]], np.ndarray]:
-        """Host Flesch stage: [(score, bin)] plus the (Q,) bin array the
-        device one-hot encoder consumes.  Pure string/regex work — this
-        stage has no dense arithmetic to move off host."""
+    def complexity_counts_batch(self, texts: Sequence[str]) -> np.ndarray:
+        """Host half of the Flesch stage: the (Q, 3) int32
+        (words, sentences, syllables) count matrix.  Only the
+        string/regex tokenization stays on host — the Eq. 11 score and
+        equal-width binning run inside the fused device pipeline from
+        these counts (float32, op order of ``flesch_score_from_counts``).
+        With complexity ablated the counts are all-zero (sentences
+        clamped to 1), which the device maps to score 100.0 / bin 0 —
+        the same sentinel the host path uses."""
         if self.use_complexity:
-            comp = [self.complexity(t) for t in texts]
+            counts = [flesch_counts(t) for t in texts]
         else:
-            comp = [(100.0, 0)] * len(texts)
-        return comp, np.asarray([b for _, b in comp], dtype=np.int32)
+            counts = [(0, 1, 0)] * len(texts)
+        return np.asarray(counts, dtype=np.int32).reshape(len(texts), 3)
 
     def instruction_features(self, texts: Sequence[str]
                              ) -> Tuple[np.ndarray, np.ndarray]:

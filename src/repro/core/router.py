@@ -37,22 +37,37 @@ from repro.kernels.featurize.ops import pad_pow2
 from repro.kernels.linucb import linucb_scores
 
 
+# EWMA step for the per-arm baseline of offered cost-model predictions
+# (route_batch's energy_costs_wh tilt); slow enough that one odd batch
+# does not swing the baseline, fast enough to track load shifts
+_PRED_COST_BETA = 0.1
+
+
 @functools.partial(jax.jit, static_argnames=(
     "mode", "use_task", "use_cluster", "use_complexity", "n_tasks",
     "n_clusters", "n_bins", "alpha"))
 def _fused_decide(ids, weights, emb_in, labels_in, proj, w_clf, b_clf,
-                  centroids, kcounts, kinit, comp_bins, feasible, valid,
-                  a_inv, theta, active, *, mode: str, use_task: bool,
-                  use_cluster: bool, use_complexity: bool, n_tasks: int,
-                  n_clusters: int, n_bins: int, alpha: float):
+                  centroids, kcounts, kinit, comp_counts, comp_lo,
+                  comp_width, feasible, valid, a_inv, theta, active, *,
+                  mode: str, use_task: bool, use_cluster: bool,
+                  use_complexity: bool, n_tasks: int, n_clusters: int,
+                  n_bins: int, alpha: float):
     """The whole routing decision as one jitted device program.
 
     featurize (Pallas hashed-embedding kernel over the padded id/weight
     tensors) → task-classifier logits → Eq. 9–10 k-means scan in arrival
-    order → one-hot context encoding → fused Pallas LinUCB scoring →
-    feasibility-masked argmax.  One host→device transfer in (feature ids,
-    complexity bins, feasibility), one device→host transfer out (arms,
-    scores, labels, clusters, k-means state).
+    order → Flesch score+bin from the host-tokenized counts → one-hot
+    context encoding → fused Pallas LinUCB scoring → feasibility-masked
+    argmax.  One host→device transfer in (feature ids, complexity
+    counts, feasibility), one device→host transfer out (arms, scores,
+    labels, clusters, complexity, k-means state).
+
+    ``comp_counts`` is the (Q, 3) int32 (words, sentences, syllables)
+    matrix from ``ContextGenerator.complexity_counts_batch``; the Eq. 11
+    arithmetic below is the float32 op-order mirror of the host
+    reference ``flesch_score_from_counts`` + ``FleschComplexity.bin``
+    (``comp_lo``/``comp_width`` are the binner's float32 scalars), so
+    host and device produce identical bins.
 
     ``mode`` says what the stacked id tensor holds: "both" = full texts
     then instruction slices, "full"/"instr" = one of them, "none" = the
@@ -62,7 +77,7 @@ def _fused_decide(ids, weights, emb_in, labels_in, proj, w_clf, b_clf,
     padding rows must not touch the k-means state and are sliced off on
     the host.
     """
-    q = comp_bins.shape[0]
+    q = comp_counts.shape[0]
     emb, emb_i = emb_in, None
     if mode == "both":
         e2 = hashed_embed(ids, weights, proj)
@@ -81,6 +96,25 @@ def _fused_decide(ids, weights, emb_in, labels_in, proj, w_clf, b_clf,
             centroids, kcounts, kinit, emb, valid=valid)
     else:
         clusters = jnp.zeros((q,), jnp.int32)
+    if use_complexity:
+        w_ = comp_counts[:, 0].astype(jnp.float32)
+        s_ = comp_counts[:, 1].astype(jnp.float32)
+        sy = comp_counts[:, 2].astype(jnp.float32)
+        # W >= 1 on selected rows, so max(W, 1) == W there; it only guards
+        # the masked-off W == 0 branch from dividing by zero
+        ws = w_ / s_
+        sw = sy / jnp.maximum(w_, jnp.float32(1.0))
+        raw = (jnp.float32(206.835) - jnp.float32(1.015) * ws
+               - jnp.float32(84.6) * sw)
+        comp_scores = jnp.where(
+            w_ > 0, jnp.clip(raw, jnp.float32(0.0), jnp.float32(100.0)),
+            jnp.float32(100.0))
+        comp_bins = jnp.clip(
+            ((comp_scores - comp_lo) / comp_width).astype(jnp.int32),
+            0, n_bins - 1)
+    else:
+        comp_scores = jnp.full((q,), 100.0, jnp.float32)
+        comp_bins = jnp.zeros((q,), jnp.int32)
     parts = [
         (jax.nn.one_hot(labels, n_tasks) if use_task
          else jnp.zeros((q, n_tasks))),
@@ -94,7 +128,8 @@ def _fused_decide(ids, weights, emb_in, labels_in, proj, w_clf, b_clf,
     scores = linucb_scores(a_inv, theta, x, alpha)
     masked = jnp.where(active[None, :] & feasible, scores, NEG_INF)
     arms = jnp.argmax(masked, axis=1)
-    return arms, masked, labels, clusters, centroids, kcounts, kinit
+    return (arms, masked, labels, clusters, centroids, kcounts, kinit,
+            comp_scores, comp_bins)
 
 
 class GreenServRouter:
@@ -120,6 +155,13 @@ class GreenServRouter:
         self._acc_sum = np.zeros(m, np.float64)
         self._cost_sum = np.zeros(m, np.float64)
         self._decomposed_complete = True
+        # predictive-cost tilt baseline (route_batch's energy_costs_wh):
+        # per-arm EWMA of the predictions *offered* to this router, so each
+        # arm's forecast is scored relative to its own norm — a constant
+        # prediction (or any per-arm-constant matrix) tilts nothing and
+        # decisions match the cost-model-off path exactly
+        self._pred_cost_mean = np.zeros(m, np.float64)
+        self._pred_cost_seen = np.zeros(m, bool)
         # zero-calibration model addition: pool insert → fresh bandit arm
         pool.on_add(self._on_model_added)
 
@@ -134,6 +176,8 @@ class GreenServRouter:
         self._b_cost[arm] = 0.0
         self._acc_sum[arm] = 0.0
         self._cost_sum[arm] = 0.0
+        self._pred_cost_mean[arm] = 0.0
+        self._pred_cost_seen[arm] = False
 
     # -- online λ control (telemetry.budget drives this) -----------------------
 
@@ -169,6 +213,7 @@ class GreenServRouter:
 
     def route_batch(self, queries: Sequence[Query],
                     energy_discounts_wh: Optional[np.ndarray] = None,
+                    energy_costs_wh: Optional[np.ndarray] = None,
                     embeddings: Optional[np.ndarray] = None,
                     task_labels: Optional[np.ndarray] = None
                     ) -> List[RouteDecision]:
@@ -195,6 +240,19 @@ class GreenServRouter:
         the queries the tilt is actually about (where the discounted
         greedy choice deliberately wins).
 
+        ``energy_costs_wh`` (Q, n_models), optional: the cost model's
+        *predicted* Wh for running each query on each arm (``PoolServer``
+        fills this from ``EnergyCostModel.predict_matrix``).  Predictions
+        replace the bandit's coarse per-arm energy statistics for *this*
+        decision: each arm's forecast is centred on its own running EWMA
+        baseline of offered predictions, and the centred excess enters as
+        an energy penalty ``−λ·(pred − baseline)/energy_scale`` before
+        the argmax.  Centring makes the tilt shape-sensitive rather than
+        level-sensitive — a per-arm-constant matrix tilts nothing, so an
+        uncalibrated cost model cannot perturb decisions, and systematic
+        arm-level cost differences stay the posterior's job (learned from
+        realized feedback, not forecasts).
+
         ``embeddings`` (Q, dim) / ``task_labels`` (Q,) forward feature
         work the caller already did on these texts (the scheduler's cache
         probe) into ``ContextGenerator.batch`` — bitwise identical to
@@ -203,8 +261,9 @@ class GreenServRouter:
         With ``RouterConfig.featurize`` resolving to "device" (and the
         deterministic LinUCB/Sherman–Morrison policy), featurize→score
         runs as one fused jitted pipeline (``_fused_decide``): the host
-        contributes one vectorized hashing pass + Flesch bins, the device
-        does everything else.  The host path below stays the reference
+        contributes one vectorized hashing pass + Flesch word/sentence/
+        syllable counts, the device does everything else (including the
+        Eq. 11 score + binning arithmetic).  The host path below stays the reference
         implementation; both agree (tests/test_featurize_parity.py).
         """
         if not queries:
@@ -215,6 +274,31 @@ class GreenServRouter:
         else:
             ctxs, arms, scores, feasible, t0 = self._featurize_score_host(
                 queries, embeddings, task_labels)
+        if energy_costs_wh is not None:
+            c = np.asarray(energy_costs_wh, np.float64)
+            if c.shape[0] != len(queries):
+                raise ValueError(
+                    f"energy_costs_wh rows {c.shape[0]} != batch "
+                    f"{len(queries)}")
+            w = min(c.shape[1], scores.shape[1])
+            cols = c[:, :w]
+            batch_mean = cols.mean(axis=0)
+            seen = self._pred_cost_seen[:w]
+            self._pred_cost_mean[:w] = np.where(
+                seen,
+                (1.0 - _PRED_COST_BETA) * self._pred_cost_mean[:w]
+                + _PRED_COST_BETA * batch_mean,
+                batch_mean)
+            self._pred_cost_seen[:w] = True
+            tilt = np.zeros_like(scores)
+            tilt[:, :w] = (-self.config.lam
+                           * (cols - self._pred_cost_mean[:w])
+                           / self.config.energy_scale_wh)
+            if np.any(tilt):
+                # NEG_INF (infeasible/inactive) scores survive any finite
+                # tilt, so a plain re-argmax is safe
+                scores = scores + tilt
+                arms = np.argmax(scores, axis=1).astype(arms.dtype)
         if energy_discounts_wh is not None:
             d = np.asarray(energy_discounts_wh, np.float32)
             if d.shape[0] != len(queries):
@@ -298,7 +382,7 @@ class GreenServRouter:
         texts = [q.text for q in queries]
         n = len(texts)
         tc0 = time.perf_counter()
-        comp, comp_bins = ctx.complexity_batch(texts)
+        comp_counts = ctx.complexity_counts_batch(texts)
         tc1 = time.perf_counter()
         need_emb = ctx.use_cluster and embeddings is None
         need_instr = ctx.use_task and task_labels is None
@@ -326,7 +410,9 @@ class GreenServRouter:
             emb_in = jnp.pad(emb_in, ((0, q_pad - n), (0, 0)))
         if labels_in is not None:
             labels_in = jnp.pad(labels_in, (0, q_pad - n))
-        comp_bins = np.pad(comp_bins, (0, q_pad - n))
+        pad_rows = np.zeros((q_pad - n, 3), np.int32)
+        pad_rows[:, 1] = 1            # sentences >= 1: padding rows never 0/0
+        comp_counts = np.concatenate([comp_counts, pad_rows])
         valid = np.arange(q_pad) < n
         ctx.record_device_batch(n, (time.perf_counter() - tc1) * 1e3,
                                 (tc1 - tc0) * 1e3)
@@ -340,7 +426,8 @@ class GreenServRouter:
         out = _fused_decide(
             jnp.asarray(ids), jnp.asarray(weights), emb_in, labels_in,
             ctx.embedder.proj_device, w_clf, b_clf, cent, cnt, ini,
-            jnp.asarray(comp_bins), jnp.asarray(feas_pad),
+            jnp.asarray(comp_counts), jnp.float32(ctx.complexity.lo),
+            ctx.complexity.bin_width32, jnp.asarray(feas_pad),
             jnp.asarray(valid), st.A_inv, st.theta, st.active,
             mode=mode, use_task=ctx.use_task, use_cluster=ctx.use_cluster,
             use_complexity=ctx.use_complexity,
@@ -348,10 +435,14 @@ class GreenServRouter:
             n_bins=self.config.n_complexity_bins,
             alpha=float(self.config.alpha_ucb))
         _sync(out)                    # timing boundary: the decision clock
-        arms_d, masked, labels, clusters, cent2, cnt2, ini2 = out
+        (arms_d, masked, labels, clusters, cent2, cnt2, ini2,
+         comp_scores_d, comp_bins_d) = out
         if ctx.use_cluster:
             ctx.kmeans.load_device_state(cent2, cnt2, ini2)
         self.policy.advance_key()     # mirror select_batch's state step
+        comp = [(float(s), int(b)) for s, b in
+                zip(np.asarray(comp_scores_d, np.float32)[:n],
+                    np.asarray(comp_bins_d)[:n])]
         ctxs = ctx.make_contexts(np.asarray(labels, dtype=np.int64)[:n],
                                  np.asarray(clusters, dtype=np.int64)[:n],
                                  comp)
@@ -433,7 +524,9 @@ class GreenServRouter:
                 "decomposed": {"b_acc": self._b_acc.copy(),
                                "b_cost": self._b_cost.copy(),
                                "acc_sum": self._acc_sum.copy(),
-                               "cost_sum": self._cost_sum.copy()}}
+                               "cost_sum": self._cost_sum.copy()},
+                "pred_cost_mean": {"mean": self._pred_cost_mean.copy(),
+                                   "seen": self._pred_cost_seen.copy()}}
 
     def load_state_dict(self, d: dict) -> None:
         self.policy.load_state_dict(d["bandit"])
@@ -451,3 +544,7 @@ class GreenServRouter:
             # but cannot be re-derived — set_lambda keeps working, minus
             # the instant posterior rebuild
             self._decomposed_complete = False
+        pc = d.get("pred_cost_mean")
+        if pc is not None:
+            self._pred_cost_mean = np.asarray(pc["mean"], np.float64).copy()
+            self._pred_cost_seen = np.asarray(pc["seen"], bool).copy()

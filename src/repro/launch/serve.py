@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.cache import CACHE_MODES, GreenCache
 from repro.configs import ARCH_IDS, get_config
+from repro.costmodel import EnergyCostModel
 from repro.core.pool import ModelPool
 from repro.core.router import GreenServRouter
 from repro.core.types import ModelProfile, Query, RouterConfig
@@ -118,6 +119,16 @@ def main() -> None:
                          "featurize→score pipeline (kernels/featurize), "
                          "host = reference numpy path, auto = device on "
                          "TPU (elsewhere Pallas runs in interpret mode)")
+    ap.add_argument("--cost-model", default="on", choices=["on", "off"],
+                    help="predictive energy cost model (docs/ENERGY.md): "
+                         "pre-dispatch Wh forecasts tilt routing, charge "
+                         "the governor's in-flight budget, and calibrate "
+                         "online from the metered joule ledger")
+    ap.add_argument("--admission-planner", action="store_true",
+                    help="energy-aware admission: defer arrivals whose "
+                         "predicted Wh would breach the governor's "
+                         "remaining budget this tick (needs --cost-model "
+                         "on and --energy-budget-wh)")
     ap.add_argument("--disaggregate", action="store_true",
                     help="role-specialized serving: each member gets a "
                          "decode twin (shared params); prompts prefill on "
@@ -143,13 +154,16 @@ def main() -> None:
                        kv_cache_blocks=args.kv_cache_blocks,
                        semantic_threshold=args.semantic_threshold,
                        semantic_ttl_s=args.semantic_ttl)
+    cost_model = (EnergyCostModel() if args.cost_model == "on" else None)
     server = PoolServer(router, engines, tokenizer=tok.encode,
                         hedge_after_steps=args.hedge,
                         accuracy_fn=exact_match_accuracy,
                         telemetry=telemetry,
                         prefill_chunk=args.prefill_chunk,
                         cache=cache,
-                        decode_engines=decode_engines or None)
+                        decode_engines=decode_engines or None,
+                        cost_model=cost_model,
+                        admission_planner=args.admission_planner)
     t0 = time.monotonic()
     # continuous-batching drive: arrivals park in the scheduler's queue and
     # are admitted into free prefill slots each tick (routing happens at
@@ -182,6 +196,11 @@ def main() -> None:
               f"{sem.get('hits', 0)}/{sem.get('lookups', 0)}; prefix hit "
               f"tokens {hit_tokens}; {blocks} KV blocks resident "
               f"({server.stats['cache_hits']} short-circuits)")
+    if cost_model is not None:
+        cm = cost_model.stats()
+        print(f"  cost model: {cm['n_reconciled']}/{cm['n_predicted']} "
+              f"forecasts reconciled; MAE {cm['mae_ratio']:.1%} of metered "
+              f"Wh; deferred admissions {server.stats['deferred']}")
     print(telemetry.summary())
     if args.metrics_out:
         n = dump_jsonl(args.metrics_out, telemetry.registry, telemetry.power,

@@ -594,60 +594,66 @@ class ModelEngine(BaseEngine):
         req.finish_s = time.monotonic()
         out = [t for t in req.generated if t != req.eos_id]
         if req.kv_migrated and req.prefill_wh > 0:
-            energy_wh = self._migrated_query_wh(req, len(out))
+            pre_wh, dec_wh = self._migrated_query_wh(req, len(out))
         else:
-            energy_wh = self._query_wh(len(req.prompt_tokens),
-                                       req.prefix_reused, len(out))
+            pre_wh, dec_wh = self._query_wh(len(req.prompt_tokens),
+                                            req.prefix_reused, len(out))
         ttft_ms = ((req.first_token_s - req.submit_s) * 1e3
                    if req.first_token_s else 0.0)
         return Response(
             uid=req.uid, model_name=self.name, tokens=out,
             text=self.detokenize(out), latency_ms=req.latency_ms,
             queue_ms=(req.start_s - req.submit_s) * 1e3,
-            energy_wh=energy_wh, input_tokens=len(req.prompt_tokens),
+            energy_wh=pre_wh + dec_wh, input_tokens=len(req.prompt_tokens),
             output_tokens=len(out), hedged_winner=req.hedged,
             ttft_ms=ttft_ms, prefix_reused=req.prefix_reused,
-            kv_migrated=req.kv_migrated)
+            kv_migrated=req.kv_migrated, prefill_wh=pre_wh)
 
-    def _query_wh(self, n_prompt: int, reused: int, n_out: int) -> float:
-        """Per-query Wh of record.  Cold queries keep ``measure_query``
-        exactly.  With a spliced prefix, the prefill term covers only the
-        uncached suffix (charged at its true cache offsets) while decode
-        is still charged at *full* context depth — prefix reuse avoids
-        prefill work, never decode work (every decode step attends over
-        the whole cache).  The bandit feedback and the governor's bucket
-        drain both see this true spend."""
+    def _query_wh(self, n_prompt: int, reused: int,
+                  n_out: int) -> tuple:
+        """Per-query (prefill Wh, decode Wh) of record; the sum is what
+        ``measure_query`` charges.  Cold queries keep its terms exactly.
+        With a spliced prefix, the prefill term covers only the uncached
+        suffix (charged at its true cache offsets) while decode is still
+        charged at *full* context depth — prefix reuse avoids prefill
+        work, never decode work (every decode step attends over the whole
+        cache).  The bandit feedback and the governor's bucket drain both
+        see this true spend; the phase split feeds the cost model's
+        per-phase residuals."""
         if reused <= 0:
-            return self.energy.measure_query(self.cost_params,
-                                             n_prompt, n_out)
-        joules = self._prefill_joules(max(n_prompt - reused, 1),
-                                      kv_start=reused)
+            f, b = prefill_cost(self.cost_params, max(n_prompt, 1))
+            pre_j = energy_joules(roofline(f, b, 0.0, self.energy.chips))
+        else:
+            pre_j = self._prefill_joules(max(n_prompt - reused, 1),
+                                         kv_start=reused)
         mid_kv = n_prompt + max(n_out, 1) // 2
         f, b = decode_step_cost(self.cost_params, mid_kv)
-        joules += max(n_out, 0) * energy_joules(
+        dec_j = max(n_out, 0) * energy_joules(
             roofline(f, b, 0.0, self.energy.chips))
         # keep the monitor's totals coherent with measure_query's
-        self.energy.total_joules += joules
+        self.energy.total_joules += pre_j + dec_j
         self.energy.n_queries += 1
-        return joules / JOULES_PER_WH
+        return pre_j / JOULES_PER_WH, dec_j / JOULES_PER_WH
 
-    def _migrated_query_wh(self, req: Request, n_out: int) -> float:
-        """Per-query Wh of record for a request that prefilled elsewhere:
-        the prefill twin's stamped ``prefill_wh`` + this engine's decode
-        work at full context depth + the phase-boundary KV DMA.  Decode is
+    def _migrated_query_wh(self, req: Request, n_out: int) -> tuple:
+        """Per-query (prefill Wh, decode Wh) of record for a request that
+        prefilled elsewhere: the prefill twin's stamped ``prefill_wh`` +
+        the phase-boundary KV DMA on the prefill side, this engine's
+        decode work at full context depth on the decode side.  Decode is
         charged here (mirroring ``_query_wh``'s mid-depth decode term);
         the prefill term was already charged to the twin's monitor at
         migration time."""
         n_prompt = len(req.prompt_tokens)
         mid_kv = n_prompt + max(n_out, 1) // 2
         f, b = decode_step_cost(self.cost_params, mid_kv)
-        joules = max(n_out, 0) * energy_joules(
+        dec_j = max(n_out, 0) * energy_joules(
             roofline(f, b, 0.0, self.energy.chips))
         f, b = kv_migration_cost(self.cost_params, req.kv_migrated)
-        joules += energy_joules(roofline(f, b, 0.0, self.energy.chips))
-        self.energy.total_joules += joules
+        mig_j = energy_joules(roofline(f, b, 0.0, self.energy.chips))
+        self.energy.total_joules += dec_j + mig_j
         self.energy.n_queries += 1
-        return joules / JOULES_PER_WH + req.prefill_wh
+        return (req.prefill_wh + mig_j / JOULES_PER_WH,
+                dec_j / JOULES_PER_WH)
 
     def _capture_prefix(self, slot: int, req: Request) -> None:
         """Register a finished prompt's KV with the prefix cache.  The

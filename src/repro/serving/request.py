@@ -52,6 +52,10 @@ class Request:
     # (task_label, cluster, embedding) computed once by the scheduler's
     # cache probe; reused at completion for the semantic insert
     cache_features: Optional[tuple] = None
+    # pre-dispatch Wh forecast stamped at admission by the scheduler's
+    # EnergyCostModel (0.0 = no cost model / never predicted); reconciled
+    # against the metered energy_wh at completion
+    predicted_wh: float = 0.0
     submit_s: float = dataclasses.field(default_factory=time.monotonic)
     start_s: float = 0.0
     first_token_s: float = 0.0
@@ -101,3 +105,7 @@ class Response:
     ttft_ms: float = 0.0     # time to first generated token (0 = unknown)
     prefix_reused: int = 0   # prompt tokens served from the prefix-KV cache
     kv_migrated: int = 0     # prompt-KV tokens moved prefill→decode engine
+    # prefill-phase share of energy_wh (migration DMA included); 0.0 for
+    # engines without a phase split.  The cost model trains its per-phase
+    # residual buckets from this split.
+    prefill_wh: float = 0.0

@@ -28,6 +28,7 @@ from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence
 
 if TYPE_CHECKING:  # pragma: no cover - annotation only
     from repro.cache import GreenCache
+    from repro.costmodel import EnergyCostModel
     from repro.telemetry.hub import Telemetry
 
 import numpy as np
@@ -67,7 +68,9 @@ class PoolServer:
                  telemetry: Optional["Telemetry"] = None,
                  prefill_chunk: Optional[int] = None,
                  cache: Optional["GreenCache"] = None,
-                 decode_engines: Optional[Dict[str, BaseEngine]] = None):
+                 decode_engines: Optional[Dict[str, BaseEngine]] = None,
+                 cost_model: Optional["EnergyCostModel"] = None,
+                 admission_planner: bool = False):
         names = router.pool.names
         missing = [n for n in names if n not in engines]
         if missing:
@@ -89,6 +92,11 @@ class PoolServer:
         if self.cache is not None:
             # guard features must live in the router's embedding space
             self.cache.bind_context(router.context)
+        # predictive energy cost model (repro.costmodel): pre-dispatch Wh
+        # forecasts feeding the router tilt, the governor's in-flight
+        # charge, and (when enabled) the energy-aware admission planner
+        self.cost_model = cost_model
+        self.admission_planner = bool(admission_planner)
         for name, eng in engines.items():
             self._configure_engine(name, eng, initial=True)
         if telemetry is not None and telemetry.governor is not None:
@@ -101,7 +109,7 @@ class PoolServer:
         # here until a step() tick has free prefill capacity for them
         self.arrivals: List[Query] = []
         self.stats = {"hedges": 0, "restarts": 0, "completed": 0,
-                      "cache_hits": 0, "migrations": 0}
+                      "cache_hits": 0, "migrations": 0, "deferred": 0}
         # feedback for completions collected during the current step(); the
         # router is updated once per step via feedback_batch
         self._fb_buffer: List[Feedback] = []
@@ -128,6 +136,12 @@ class PoolServer:
             engine.set_prefix_cache(self.cache.prefix_for(model_name))
         if role is not None:
             engine.set_role(role)
+        if self.cost_model is not None:
+            # the predictor is keyed by *model* name: a decode twin shares
+            # the primary's cost model (same params, same shape terms —
+            # the disaggregation surcharge is a flag set by
+            # attach_decode_engine, not a separate predictor)
+            self.cost_model.register_engine(name.split("#", 1)[0], engine)
         if self.telemetry is not None:
             self.telemetry.on_engine_added(name, engine, initial=initial)
 
@@ -159,6 +173,9 @@ class PoolServer:
             return
         self._configure_engine(f"{name}#decode", twin, role="decode")
         self.decode_engines[name] = twin
+        if self.cost_model is not None:
+            # the prior now charges the phase-boundary KV DMA too
+            self.cost_model.set_disaggregated(name, True)
 
     # -- submission ---------------------------------------------------------------
 
@@ -189,8 +206,71 @@ class PoolServer:
         free = sum(e.free_capacity for e in self.engines.values())
         if free <= 0:
             return
-        batch, self.arrivals = self.arrivals[:free], self.arrivals[free:]
-        self.submit_batch(batch)
+        batch, rest = self.arrivals[:free], self.arrivals[free:]
+        if self._planner_active():
+            batch, deferred = self._plan_admissions(batch)
+            rest = deferred + rest
+        self.arrivals = rest
+        if batch:
+            self.submit_batch(batch)
+
+    def _planner_active(self) -> bool:
+        """Energy-aware admission requires all three legs: the planner
+        knob, a cost model to forecast with, and a governor whose budget
+        headroom is the thing being planned against."""
+        return (self.admission_planner and self.cost_model is not None
+                and self.telemetry is not None
+                and self.telemetry.governor is not None)
+
+    def _engine_occupancy(self, name: str) -> float:
+        """Fraction of the engine's slot/queue capacity in use — the cost
+        model's batching-pressure feature."""
+        eng = self.engines.get(name)
+        if eng is None:
+            return 0.0
+        cap = max(int(getattr(eng, "max_batch", 0)
+                      or getattr(eng, "concurrency", 0) or 1), 1)
+        return min(eng.pending / cap, 1.0)
+
+    def _plan_admissions(self, batch: List[Query]) -> tuple:
+        """(admit, deferred): FIFO stop-at-first-breach over the
+        governor's remaining per-tick Wh headroom (docs/ENERGY.md).  Each
+        arrival is costed at its *cheapest* arm (the planner must never
+        defer a query the router could still serve within budget); the
+        first arrival whose forecast would breach the headroom stops the
+        scan — no reordering, no cherry-picking behind the breach.  An
+        idle pool always admits the head-of-line arrival regardless of
+        headroom: admission pressure may slow the pool down, but it must
+        never stop it (``run_until_drained`` would raise LivelockError)."""
+        gov = self.telemetry.governor
+        headroom = gov.admission_headroom_wh()
+        names = self.router.pool.names
+        costs = self.cost_model.predict_matrix(
+            names, [len(self.tokenizer(q.text)) for q in batch],
+            [q.max_new_tokens for q in batch],
+            occupancy={n: self._engine_occupancy(n) for n in names})
+        per_query = costs.min(axis=1)
+        admit: List[Query] = []
+        planned = 0.0
+        breach_wh = 0.0
+        pool_idle = not self.inflight
+        for q, wh in zip(batch, per_query):
+            if planned + wh > headroom:
+                if not admit and pool_idle:
+                    admit.append(q)      # head-of-line liveness guarantee
+                    planned += float(wh)
+                else:
+                    breach_wh = float(wh)
+                break
+            admit.append(q)
+            planned += float(wh)
+        deferred = list(batch[len(admit):])
+        if deferred:
+            self.stats["deferred"] += len(deferred)
+            self.telemetry.on_admission_deferred(
+                len(deferred), predicted_wh=breach_wh,
+                headroom_wh=max(headroom - planned, 0.0))
+        return admit, deferred
 
     def submit_batch(self, queries: Sequence[Query]) -> List[Request]:
         """Admit a batch: cache consultation, then one ``route_batch`` call
@@ -241,11 +321,22 @@ class PoolServer:
         if routable and miss_features[0] is not None:
             labels = np.asarray([f[0] for f in miss_features], np.int64)
             embs = np.stack([f[2] for f in miss_features])
+        # pre-dispatch joule forecasts: a (Q, M) predicted-Wh matrix tilts
+        # the routing decision per (query, arm), replacing the bandit's
+        # coarse per-arm energy statistics for this decision
+        costs = occ = None
+        if self.cost_model is not None and routable:
+            names = self.router.pool.names
+            occ = {n: self._engine_occupancy(n) for n in names}
+            costs = self.cost_model.predict_matrix(
+                names, [len(t) for t in tokens],
+                [q.max_new_tokens for q in routable], occupancy=occ)
         decisions = self.router.route_batch(
             routable, energy_discounts_wh=discounts,
-            embeddings=embs, task_labels=labels)
+            energy_costs_wh=costs, embeddings=embs, task_labels=labels)
         per_engine: Dict[str, List[Request]] = {}
         expected_savings_wh = 0.0
+        predicted = [] if costs is not None else None
         for i, (query, decision) in enumerate(zip(routable, decisions)):
             req = Request(query=query, prompt_tokens=tokens[i],
                           max_new_tokens=query.max_new_tokens,
@@ -257,12 +348,31 @@ class PoolServer:
             if discounts is not None:
                 expected_savings_wh += float(
                     discounts[i, decision.model_index])
+            if costs is not None:
+                # the query's forecast on the arm that won, net of its
+                # predicted prefix-reuse saving (cold − discount = warm)
+                wh = float(costs[i, decision.model_index])
+                if discounts is not None:
+                    wh = max(wh - float(discounts[i, decision.model_index]),
+                             0.0)
+                req.predicted_wh = wh
+                self.cost_model.note_admission(
+                    query.uid, decision.model_name, wh,
+                    n_prompt=len(tokens[i]),
+                    max_new_tokens=query.max_new_tokens,
+                    occupancy=occ.get(decision.model_name, 0.0))
+                predicted.append((query.uid, wh))
         for name, batch in per_engine.items():
             self.engines[name].submit_many(batch)
         if self.telemetry is not None:
+            # with the cost model on, the per-uid predictions are already
+            # net of prefix reuse — also crediting expected_savings_wh
+            # would discount the governor's in-flight commitment twice
             self.telemetry.on_admit(
                 len(routable), sum(e.pending for e in self.engines.values()),
-                expected_savings_wh=expected_savings_wh)
+                expected_savings_wh=(0.0 if costs is not None
+                                     else expected_savings_wh),
+                predicted=predicted)
         return [req_by_uid[q.uid] for q in queries]
 
     # -- GreenCache consultation (docs/CACHING.md) -------------------------------
@@ -315,7 +425,10 @@ class PoolServer:
         """(Q, n_models) expected Wh each engine's prefix cache would save
         per query — the router adds λ·ΔWh/scale to those arms' scores.
         Probes use ``peek_len`` (no LRU touch): an unrouted probe must not
-        keep blocks warm."""
+        keep blocks warm.  With a cost model attached the discount is the
+        calibrated predicted-suffix-minus-full (``discount_wh``) instead
+        of the engine's raw analytic prefill estimate, so the tilt and
+        the governor's in-flight charge come from the same forecaster."""
         if self.cache is None or not self.cache.prefix_enabled or not queries:
             return None
         names = self.router.pool.names
@@ -325,10 +438,17 @@ class PoolServer:
             pc = getattr(eng, "prefix_cache", None)
             if pc is None:
                 continue
+            occ = (self._engine_occupancy(name)
+                   if self.cost_model is not None else 0.0)
             for i, toks in enumerate(tokens):
                 p = pc.peek_len(toks, max_tokens=len(toks) - 1)
                 if p > 0:
-                    disc[i, j] = eng.estimate_prefill_wh(p)
+                    if self.cost_model is not None:
+                        disc[i, j] = self.cost_model.discount_wh(
+                            name, len(toks), queries[i].max_new_tokens,
+                            p, occ)
+                    else:
+                        disc[i, j] = eng.estimate_prefill_wh(p)
         return disc if disc.any() else None
 
     # -- hedged (straggler-mitigating) dispatch ------------------------------------
@@ -457,8 +577,15 @@ class PoolServer:
                 text_out=resp.text, energy_wh=resp.energy_wh,
                 accuracy=float(accuracy), input_tokens=resp.input_tokens,
                 output_tokens=resp.output_tokens))
+        predicted_wh = None
+        if self.cost_model is not None:
+            # reconcile the admission-time forecast against the metered
+            # Wh and fold the completion into the residual calibration
+            predicted_wh = self.cost_model.observe_response(
+                resp, float(accuracy))
         if self.telemetry is not None:
-            self.telemetry.on_completion(resp, float(accuracy))
+            self.telemetry.on_completion(resp, float(accuracy),
+                                         predicted_wh=predicted_wh)
             if hedged_pair:
                 # the cancelled duplicate's work never completes; charge
                 # the energy budget for it (winner's cost as proxy)

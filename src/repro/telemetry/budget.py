@@ -24,7 +24,7 @@ thousands of fresh observations to wash out the old one.
 from __future__ import annotations
 
 import math
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 def diurnal_carbon_intensity(t_s: float, amplitude: float = 0.3,
@@ -126,6 +126,14 @@ class EnergyBudgetGovernor:
         # hits known at admission); discounts the in-flight commitment so
         # a warm-cache burst doesn't tighten λ for energy it won't spend
         self.inflight_savings_wh = 0.0
+        # predict-then-reconcile (docs/ENERGY.md): per-query predicted Wh
+        # charged at admission (uid-keyed so a completion releases exactly
+        # its own charge — hedge winners share the primary's uid), plus
+        # the running ledger of prediction-vs-metered error ratios
+        self.inflight_pred: Dict[int, float] = {}
+        self.inflight_predicted_wh = 0.0
+        self.prediction_error = {"n": 0, "abs_ratio_sum": 0.0,
+                                 "ratio_sum": 0.0, "max_abs_ratio": 0.0}
 
     def attach(self, router) -> None:
         self.router = router
@@ -142,7 +150,8 @@ class EnergyBudgetGovernor:
         return 1.0 / max(self.carbon_fn(t_s), 1e-6)
 
     def on_admission(self, n: int, t_s: float = 0.0,
-                     expected_savings_wh: float = 0.0) -> None:
+                     expected_savings_wh: float = 0.0,
+                     predicted=None) -> None:
         """Note routed-but-not-yet-completed queries.  Routing commits
         energy long before completion meters it; the projection charges
         each in-flight query its expected (EWMA) cost so admission bursts
@@ -150,9 +159,23 @@ class EnergyBudgetGovernor:
 
         ``expected_savings_wh``: Wh the batch is expected *not* to spend
         (prefix-KV hits known at routing time); it discounts the in-flight
-        commitment until the corresponding completions retire it."""
+        commitment until the corresponding completions retire it.
+
+        ``predicted``: iterable of ``(uid, predicted_wh)`` from the energy
+        cost model — each query's *own* pre-dispatch forecast replaces the
+        pool-average EWMA in the in-flight commitment, and the charge is
+        released (and reconciled against the metered Wh) when that uid
+        completes or is cancelled."""
         self.admitted += n
         self.inflight_savings_wh += max(expected_savings_wh, 0.0)
+        if predicted is not None:
+            for uid, wh in predicted:
+                wh = max(float(wh), 0.0)
+                prev = self.inflight_pred.pop(uid, None)
+                if prev is not None:       # re-admission (restart re-route)
+                    self.inflight_predicted_wh -= prev
+                self.inflight_pred[uid] = wh
+                self.inflight_predicted_wh += wh
         if self.control_on_completion:
             self._control(t_s)
 
@@ -199,9 +222,20 @@ class EnergyBudgetGovernor:
         self.role_wh[role] = self.role_wh.get(role, 0.0) \
             + max(energy_wh, 0.0)
 
-    def on_completion(self, energy_wh: float, t_s: float = 0.0) -> None:
+    def on_completion(self, energy_wh: float, t_s: float = 0.0,
+                      uid: Optional[int] = None) -> None:
         """Drain the bucket by a completion's measured energy; in query-
-        horizon mode also earn this completion's refill credit."""
+        horizon mode also earn this completion's refill credit.  With a
+        ``uid`` the completion releases its admission-time predicted
+        charge (exactly once — the map is popped) and the prediction is
+        reconciled against the metered Wh into the ``prediction_error``
+        ledger."""
+        if uid is not None:
+            pred = self.inflight_pred.pop(uid, None)
+            if pred is not None:
+                self.inflight_predicted_wh = max(
+                    self.inflight_predicted_wh - pred, 0.0)
+                self._record_prediction_error(pred, energy_wh)
         # the completing query carries away its (average) share of the
         # expected in-flight cache savings — realized savings now show up
         # in the measured energy itself
@@ -224,6 +258,40 @@ class EnergyBudgetGovernor:
         if self.control_on_completion:
             self._control(t_s)
 
+    def on_cancel(self, uid: int, t_s: float = 0.0) -> None:
+        """Release a cancelled query's predicted in-flight charge without
+        reconciling (no completion ever meters it).  Idempotent — a uid
+        already released (or never predicted) is a no-op, so the bucket
+        can never be credited twice."""
+        pred = self.inflight_pred.pop(uid, None)
+        if pred is not None:
+            self.inflight_predicted_wh = max(
+                self.inflight_predicted_wh - pred, 0.0)
+        if self.control_on_completion:
+            self._control(t_s)
+
+    def _record_prediction_error(self, predicted_wh: float,
+                                 measured_wh: float) -> None:
+        ratio = (measured_wh - predicted_wh) / max(measured_wh, 1e-12)
+        e = self.prediction_error
+        e["n"] += 1
+        e["abs_ratio_sum"] += abs(ratio)
+        e["ratio_sum"] += ratio
+        e["max_abs_ratio"] = max(e["max_abs_ratio"], abs(ratio))
+
+    def admission_headroom_wh(self) -> float:
+        """Wh of *new* predicted work the budget can absorb right now —
+        the admission planner's gate.  The bucket may legally run
+        ``capacity_wh`` into debt, so the spendable span is
+        ``bucket + capacity``; predicted in-flight work has already
+        claimed its share, and the hard cap bounds everything."""
+        if self.exhausted:
+            return 0.0
+        soft = self.bucket_wh + self.capacity_wh - self.inflight_predicted_wh
+        hard = (self.hard_frac * self.budget_wh - self.cumulative_wh
+                - self.inflight_predicted_wh)
+        return max(min(soft, hard), 0.0)
+
     def _rate_error(self) -> Optional[float]:
         """Dimensionless burn-rate error: 0 = on the sustainable rate,
         positive = burning hot (tighten λ), negative = headroom (relax).
@@ -238,7 +306,12 @@ class EnergyBudgetGovernor:
             if self.wh_per_query_ewma is None or self.completed == 0:
                 return None
             inflight = max(self.admitted - self.completed, 0)
-            expected_inflight_wh = inflight * self.wh_per_query_ewma
+            # queries with a cost-model forecast are charged their own
+            # predicted Wh; only the unpredicted remainder falls back to
+            # the pool-average EWMA
+            unpredicted = max(inflight - len(self.inflight_pred), 0)
+            expected_inflight_wh = (self.inflight_predicted_wh
+                                    + unpredicted * self.wh_per_query_ewma)
             # prefix-KV hits known at admission won't spend their full
             # EWMA cost; the discount never exceeds the commitment itself
             expected_inflight_wh -= min(self.inflight_savings_wh,
@@ -334,4 +407,13 @@ class EnergyBudgetGovernor:
             "role_wh": dict(self.role_wh),
             "avoided_prefix_wh": self.avoided_wh["prefix"],
             "avoided_semantic_wh": self.avoided_wh["semantic"],
+            "inflight_predicted_wh": self.inflight_predicted_wh,
+            "prediction_error": {
+                "n": self.prediction_error["n"],
+                "mae_ratio": (self.prediction_error["abs_ratio_sum"]
+                              / max(self.prediction_error["n"], 1)),
+                "mean_ratio": (self.prediction_error["ratio_sum"]
+                               / max(self.prediction_error["n"], 1)),
+                "max_abs_ratio": self.prediction_error["max_abs_ratio"],
+            },
         }

@@ -20,6 +20,8 @@ LAMBDA = "lambda"           # governor changed the router's λ
 CACHE_HIT = "cache_hit"     # GreenCache answered/shortened a query
 ENGINE_ADDED = "engine_added"   # pool grew at runtime (add_engine)
 MIGRATE = "migrate"         # prompt KV handed prefill→decode engine
+DEFER = "defer"             # admission planner parked arrivals (no budget
+                            # headroom for their predicted Wh this tick)
 
 
 class Event(NamedTuple):

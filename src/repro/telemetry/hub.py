@@ -19,6 +19,7 @@ Metric conventions (exported names):
   greenserv_energy_joules_total{phase=prefill|decode}
   greenserv_energy_joules_avoided_total{kind=prefix|semantic}
   greenserv_cache_hits_total{kind=prefix|semantic}
+  greenserv_energy_prediction_error_ratio
   greenserv_lambda · greenserv_budget_pressure
 
 Energy is phase-split: engines report cumulative joules tagged prefill
@@ -67,6 +68,11 @@ class Telemetry:
             "greenserv_lambda", help="router accuracy-energy trade-off λ")
         self._pressure = r.gauge(
             "greenserv_budget_pressure", help="governor pressure in [0,1]")
+        # cost-model reconciliation: |metered − predicted| / metered Wh,
+        # one sample per completion that carried a pre-dispatch forecast
+        self._pred_err = r.histogram(
+            "greenserv_energy_prediction_error_ratio",
+            help="abs(metered-predicted)/metered Wh per completion")
         # per-model/per-engine handles, bound lazily on first use
         self._completed: Dict[str, Counter] = {}
         self._energy_per_tok: Dict[str, Histogram] = {}
@@ -115,13 +121,32 @@ class Telemetry:
     # -- scheduler hooks ----------------------------------------------------
 
     def on_admit(self, n: int, queue_depth: int,
-                 expected_savings_wh: float = 0.0) -> None:
+                 expected_savings_wh: float = 0.0,
+                 predicted=None) -> None:
+        """``predicted``: optional ``[(uid, predicted_wh), …]`` from the
+        energy cost model — forwarded to the governor's predict-then-
+        reconcile charge (released at completion/cancellation)."""
         t = self.clock()
         self._admitted.inc(n)
         self.events.emit(ev.ADMIT, t, n=n, queue_depth=queue_depth)
         if self.governor is not None:
             self.governor.on_admission(
-                n, t, expected_savings_wh=expected_savings_wh)
+                n, t, expected_savings_wh=expected_savings_wh,
+                predicted=predicted)
+
+    def on_admission_deferred(self, n: int, predicted_wh: float,
+                              headroom_wh: float) -> None:
+        """The admission planner parked ``n`` arrivals whose predicted Wh
+        would breach the governor's remaining budget this tick."""
+        self.events.emit(ev.DEFER, self.clock(), n=n,
+                         predicted_wh=predicted_wh,
+                         headroom_wh=headroom_wh)
+
+    def on_cancelled(self, uid: int) -> None:
+        """A predicted query will never complete (cancelled before any
+        engine work); release its in-flight predicted charge."""
+        if self.governor is not None:
+            self.governor.on_cancel(uid, self.clock())
 
     def on_cache_hit(self, kind: str, avoided_wh: float,
                      model: str = "") -> None:
@@ -155,7 +180,11 @@ class Telemetry:
         if not initial:
             self.events.emit(ev.ENGINE_ADDED, self.clock(), engine=name)
 
-    def on_completion(self, resp, accuracy: float) -> None:
+    def on_completion(self, resp, accuracy: float,
+                      predicted_wh: Optional[float] = None) -> None:
+        """``predicted_wh``: the pre-dispatch forecast for this query, if
+        the scheduler ran a cost model — recorded as a relative error
+        sample against the metered ``resp.energy_wh``."""
         t = self.clock()
         model = resp.model_name
         c = self._completed.get(model)
@@ -186,8 +215,11 @@ class Telemetry:
         self.events.emit(ev.COMPLETE, t, uid=resp.uid, model=model,
                          latency_ms=resp.latency_ms,
                          energy_wh=resp.energy_wh, accuracy=accuracy)
+        if predicted_wh is not None and predicted_wh > 0.0:
+            self._pred_err.record(abs(resp.energy_wh - predicted_wh)
+                                  / max(resp.energy_wh, 1e-12))
         if self.governor is not None:
-            self.governor.on_completion(resp.energy_wh, t)
+            self.governor.on_completion(resp.energy_wh, t, uid=resp.uid)
 
     def on_duplicate_work(self, energy_wh: float) -> None:
         """A hedged pair resolved: the losing duplicate burned energy that

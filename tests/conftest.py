@@ -23,6 +23,11 @@ def pytest_configure(config):
         "disagg: disaggregated prefill/decode serving tests — migration "
         "correctness, fault injection, unified equivalence "
         "(run the subset with -m disagg)")
+    config.addinivalue_line(
+        "markers",
+        "costmodel: predictive energy cost model tests — analytic prior, "
+        "RLS calibration, governor reconciliation, admission planner "
+        "(run the subset with -m costmodel)")
 
 
 @pytest.fixture(scope="session")
