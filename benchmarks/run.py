@@ -26,7 +26,7 @@ def main() -> None:
                             bench_kernels, bench_lambda_sweep,
                             bench_model_addition, bench_overhead,
                             bench_prefill, bench_routerbench,
-                            bench_telemetry, roofline)
+                            bench_scenarios, bench_telemetry, roofline)
 
     def section(title, fn):
         t0 = time.time()
@@ -53,6 +53,9 @@ def main() -> None:
             lambda: bench_model_addition.main(per_task=per_task))
     section("Table1: RouterBench",
             lambda: bench_routerbench.main(n_per_task=max(per_task // 2, 50)))
+    section("Scenario lab: flash crowd / duplicate flood / pool churn",
+            lambda: bench_scenarios.main(smoke=args.fast,
+                                         artifact_prefix=None))
     section("Table3+4: overhead",
             lambda: bench_overhead.main(n_queries=per_task))
     section("Telemetry: overhead + energy-budget governance",

@@ -705,14 +705,38 @@ class SimEngine(BaseEngine):
     latency_ms, out_tokens)`` encapsulates the calibrated behaviour tables
     (repro.data.profiles).
 
-    ``concurrency`` mirrors ``ModelEngine``'s slot semantics: up to that
-    many queued requests make progress each step, so a deep queue drains
-    ``k`` per step instead of strictly serially (paper-scale benches were
-    previously pessimistic about queueing under load).
+    A faithful cheap twin of ``ModelEngine`` for everything the scheduler,
+    cache, cost model, and telemetry observe:
+
+      * ``concurrency`` mirrors the slot semantics: up to that many queued
+        requests make progress each step, and ``free_capacity`` reports
+        the unused slots so ``PoolServer.enqueue`` continuous batching
+        admits at the pool's real parallelism;
+      * ``clock`` injects the time source (same pattern as
+        ``SemanticCache.clock``) so ``start_s``/``finish_s``/heartbeats
+        live on the bench's virtual clock instead of mixing wall and
+        modeled time;
+      * energy is phase-split: each completion's Wh divides into prefill
+        vs decode by per-token weights mirroring the calibrated tables'
+        marginal costs, feeding ``cumulative_joules_by_phase`` and
+        ``Response.prefill_wh`` exactly like the real engine;
+      * prefix-KV reuse is modeled with the *real* ``PrefixCache`` radix
+        trie (token-level matching, LRU eviction) — a hit discounts the
+        avoided prefill share from the query's spend and credits the
+        avoided-joules ledger, never un-spending energy;
+      * ``modeled_time_s`` advances by the slowest active request's
+        per-step latency share, so virtual-clock benches can diff it.
     """
 
+    # prefill/decode per-token Wh weights for the phase split; the ratio
+    # mirrors repro.data.profiles' marginal costs (MWH_PER_B_PER_IN_TOKEN
+    # vs MWH_PER_B_PER_OUT_TOKEN), kept literal to avoid a data-layer dep
+    PREFILL_TOKEN_WEIGHT = 0.002
+    DECODE_TOKEN_WEIGHT = 0.15
+
     def __init__(self, profile: ModelProfile, outcome_fn,
-                 steps_per_query: int = 1, concurrency: int = 1):
+                 steps_per_query: int = 1, concurrency: int = 1,
+                 clock: Optional[Callable[[], float]] = None):
         if concurrency < 1:
             raise ValueError(f"concurrency must be >= 1, got {concurrency}")
         self.name = profile.name
@@ -721,10 +745,21 @@ class SimEngine(BaseEngine):
         self.queue: List[Request] = []
         self.steps_per_query = steps_per_query
         self.concurrency = concurrency
+        self.clock = clock or time.monotonic
         self._failed = False
-        self._last_step_s = time.monotonic()
+        self._last_step_s = self.clock()
         self._progress: Dict[int, int] = {}
-        self._joules = 0.0
+        # outcome drawn once at first service step (slot activation) and
+        # held until completion, so latency can pace the modeled clock
+        self._outcomes: Dict[int, tuple] = {}
+        self._phase_joules = {"prefill": 0.0, "decode": 0.0}
+        self._modeled_time_s = 0.0
+        self.prefix_cache = None
+        self._avoided_joules = 0.0
+        self._prefix_hits = 0
+        # EWMA of observed cold prefill Wh per prompt token, backing
+        # estimate_prefill_wh (honest: a cold engine offers no discount)
+        self._prefill_wh_per_token: Optional[float] = None
 
     def submit(self, req: Request) -> None:
         req.model_name = self.name
@@ -734,49 +769,140 @@ class SimEngine(BaseEngine):
     def pending(self) -> int:
         return len(self.queue)
 
+    @property
+    def free_capacity(self) -> int:
+        return max(0, self.concurrency - len(self.queue))
+
+    def set_prefix_cache(self, cache) -> None:
+        """Attach a PrefixCache; the sim models a full-depth positional KV
+        layout, so there is no layout gate."""
+        self.prefix_cache = cache
+
     def cumulative_joules(self) -> float:
-        return self._joules
+        return self._phase_joules["prefill"] + self._phase_joules["decode"]
+
+    def cumulative_joules_by_phase(self) -> Dict[str, float]:
+        return dict(self._phase_joules)
+
+    def cumulative_joules_avoided(self) -> float:
+        return self._avoided_joules
+
+    def prefix_hit_count(self) -> int:
+        return self._prefix_hits
+
+    def modeled_time_s(self) -> float:
+        return self._modeled_time_s
+
+    def estimate_prefill_wh(self, n_tokens: int) -> float:
+        """Expected Wh an ``n_tokens`` prefix hit saves, from the observed
+        per-token prefill EWMA (0 until the first completion calibrates it
+        — a cold cache honestly offers no routing discount)."""
+        return (self._prefill_wh_per_token or 0.0) * max(n_tokens, 0)
+
+    def _phase_split(self, n_in: int, n_out: int) -> float:
+        """Prefill fraction of a completion's energy, by token-weighted
+        marginal cost (the fixed overhead splits proportionally)."""
+        pre = max(n_in, 0) * self.PREFILL_TOKEN_WEIGHT
+        dec = max(n_out, 1) * self.DECODE_TOKEN_WEIGHT
+        return pre / max(pre + dec, 1e-12)
+
+    def _activate(self, req: Request) -> tuple:
+        """First service step for a request: stamp start, probe the prefix
+        cache (the modeled splice — ``match`` LRU-touches the chain like a
+        real admission), and draw + pin the outcome."""
+        if req.start_s == 0.0:
+            req.start_s = self.clock()
+        outcome = self._outcomes.get(req.uid)
+        if outcome is None:
+            if (self.prefix_cache is not None and req.prefix_reused == 0
+                    and len(req.prompt_tokens) > 1):
+                p, _, _ = self.prefix_cache.match(
+                    req.prompt_tokens, max_tokens=len(req.prompt_tokens) - 1)
+                if p > 0:
+                    req.prefix_reused = p
+                    self._prefix_hits += 1
+            # state stays QUEUED while in service (a sim "slot" has no
+            # prefill/decode sub-lifecycle); hedging semantics match the
+            # seed engine: a slow head-of-queue request is still hedgeable
+            outcome = self.outcome_fn(req.query, self.name)
+            self._outcomes[req.uid] = outcome
+        return outcome
+
+    def _finish(self, req: Request, outcome: tuple) -> Response:
+        acc, energy_wh, latency_ms, out_tokens = outcome
+        n_in = len(req.prompt_tokens)
+        pre_frac = self._phase_split(n_in, out_tokens)
+        pre_wh_cold = energy_wh * pre_frac
+        dec_wh = energy_wh - pre_wh_cold
+        avoided_wh = 0.0
+        if req.prefix_reused > 0 and n_in > 0:
+            # the spliced share of the prompt was never prefilled: its
+            # energy is avoided (credited, not un-spent) and the query's
+            # Wh of record covers only the uncached suffix + decode
+            avoided_wh = pre_wh_cold * min(req.prefix_reused / n_in, 1.0)
+            self._avoided_joules += avoided_wh * JOULES_PER_WH
+        pre_wh = pre_wh_cold - avoided_wh
+        self._phase_joules["prefill"] += pre_wh * JOULES_PER_WH
+        self._phase_joules["decode"] += dec_wh * JOULES_PER_WH
+        if n_in > 0:
+            sample = pre_wh_cold / n_in
+            self._prefill_wh_per_token = (
+                sample if self._prefill_wh_per_token is None
+                else 0.8 * self._prefill_wh_per_token + 0.2 * sample)
+        if (self.prefix_cache is not None
+                and n_in >= self.prefix_cache.block_tokens):
+            # register the completed prompt; the sim has no real KV, so
+            # placeholder blocks stand in (matching is token-exact either
+            # way, and capacity/eviction behave like the real pool)
+            kv = np.zeros((1, n_in, 1, 1), np.float32)
+            self.prefix_cache.insert(req.prompt_tokens, kv, kv)
+        req.state = RequestState.DONE
+        req.finish_s = self.clock()
+        resp = Response(
+            uid=req.uid, model_name=self.name, tokens=[], text="",
+            latency_ms=latency_ms,
+            queue_ms=(req.start_s - req.submit_s) * 1e3,
+            energy_wh=pre_wh + dec_wh,
+            input_tokens=n_in,
+            output_tokens=out_tokens, ttft_ms=latency_ms,
+            prefix_reused=req.prefix_reused, prefill_wh=pre_wh)
+        resp.accuracy = acc  # type: ignore[attr-defined]
+        return resp
 
     def step(self) -> List[Response]:
         if self._failed:
             raise EngineFailure(f"engine {self.name} failed")
-        self._last_step_s = time.monotonic()
+        self._last_step_s = self.clock()
         out: List[Response] = []
         if not self.queue:
             return out
         keep: List[Request] = []
         active = 0
+        tick_dt = 0.0
         for pos, req in enumerate(self.queue):
             if active >= self.concurrency:
                 keep.extend(self.queue[pos:])
                 break
             if req.state == RequestState.CANCELLED:
                 self._progress.pop(req.uid, None)
+                self._outcomes.pop(req.uid, None)
                 continue                       # drop; frees its slot
             active += 1
-            if req.start_s == 0.0:
-                req.start_s = time.monotonic()
+            outcome = self._activate(req)
+            # the tick takes as long as its slowest active request's
+            # per-step share (slots run concurrently, like real slots)
+            tick_dt = max(tick_dt,
+                          outcome[2] / 1e3 / max(self.steps_per_query, 1))
             k = self._progress.get(req.uid, 0) + 1
             if k < self.steps_per_query:
                 self._progress[req.uid] = k
                 keep.append(req)
                 continue
             self._progress.pop(req.uid, None)
-            acc, energy_wh, latency_ms, out_tokens = self.outcome_fn(
-                req.query, self.name)
-            req.state = RequestState.DONE
-            req.finish_s = time.monotonic()
-            self._joules += energy_wh * JOULES_PER_WH
-            resp = Response(
-                uid=req.uid, model_name=self.name, tokens=[], text="",
-                latency_ms=latency_ms,
-                queue_ms=(req.start_s - req.submit_s) * 1e3,
-                energy_wh=energy_wh,
-                input_tokens=len(req.prompt_tokens),
-                output_tokens=out_tokens, ttft_ms=latency_ms)
-            resp.accuracy = acc  # type: ignore[attr-defined]
-            out.append(resp)
+            self._outcomes.pop(req.uid, None)
+            out.append(self._finish(req, outcome))
         self.queue = keep
+        self._modeled_time_s += tick_dt
         return out
 
     def restart(self) -> List[Request]:
@@ -784,7 +910,9 @@ class SimEngine(BaseEngine):
         for r in inflight:
             r.state = RequestState.QUEUED
             r.start_s = 0.0
+            r.prefix_reused = 0          # re-probes on re-admission
         self.queue = []
         self._progress.clear()
+        self._outcomes.clear()
         self._failed = False
         return inflight

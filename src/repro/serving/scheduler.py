@@ -70,7 +70,8 @@ class PoolServer:
                  cache: Optional["GreenCache"] = None,
                  decode_engines: Optional[Dict[str, BaseEngine]] = None,
                  cost_model: Optional["EnergyCostModel"] = None,
-                 admission_planner: bool = False):
+                 admission_planner: bool = False,
+                 clock: Optional[Callable[[], float]] = None):
         names = router.pool.names
         missing = [n for n in names if n not in engines]
         if missing:
@@ -85,6 +86,10 @@ class PoolServer:
                                                      for c in text[:32]])
         self.hedge_after_steps = hedge_after_steps
         self.heartbeat_timeout_s = heartbeat_timeout_s
+        # injectable time source (same pattern as SemanticCache.clock):
+        # virtual-clock benches pass the clock their SimEngines share, so
+        # submit/heartbeat timestamps never mix wall and modeled time
+        self.clock = clock or time.monotonic
         self.accuracy_fn = accuracy_fn
         self.telemetry = telemetry
         self.prefill_chunk = prefill_chunk
@@ -340,7 +345,8 @@ class PoolServer:
         for i, (query, decision) in enumerate(zip(routable, decisions)):
             req = Request(query=query, prompt_tokens=tokens[i],
                           max_new_tokens=query.max_new_tokens,
-                          cache_features=miss_features[i])
+                          cache_features=miss_features[i],
+                          submit_s=self.clock())
             per_engine.setdefault(decision.model_name, []).append(req)
             self.inflight[query.uid] = req
             self.wait_steps[query.uid] = 0
@@ -470,7 +476,8 @@ class PoolServer:
                 hedge = Request(query=req.query,
                                 prompt_tokens=list(req.prompt_tokens),
                                 max_new_tokens=req.max_new_tokens,
-                                hedged=True, hedge_of=uid)
+                                hedged=True, hedge_of=uid,
+                                submit_s=self.clock())
                 self.engines[target].submit(hedge)
                 self.hedges[uid] = hedge
                 self.stats["hedges"] += 1
@@ -480,7 +487,7 @@ class PoolServer:
     # -- fault tolerance -------------------------------------------------------------
 
     def _check_engines(self) -> None:
-        now = time.monotonic()
+        now = self.clock()
         for name, eng in self.engines.items():
             stalled = now - eng.heartbeat() > self.heartbeat_timeout_s
             if stalled or getattr(eng, "_failed", False):

@@ -28,6 +28,11 @@ def pytest_configure(config):
         "costmodel: predictive energy cost model tests — analytic prior, "
         "RLS calibration, governor reconciliation, admission planner "
         "(run the subset with -m costmodel)")
+    config.addinivalue_line(
+        "markers",
+        "scenario: scenario-lab tests — generator determinism, closed-loop "
+        "GreenServ-vs-random economics, flash-crowd liveness, pool-churn "
+        "durability (run the subset with -m scenario)")
 
 
 @pytest.fixture(scope="session")

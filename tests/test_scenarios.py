@@ -1,0 +1,187 @@
+"""Scenario-lab tests: generator determinism, closed-loop economics,
+flash-crowd liveness, pool-churn durability, and the hoisted
+RouterBench classifier fit.
+
+Mirrors ``test_paper_claims.py``'s GreenServ-vs-random comparison, but
+through the *full* serving stack — ``PoolServer.enqueue`` → GreenCache →
+``route_batch`` → feedback — on the virtual clock, so a regression
+anywhere in the closed loop (admission, caching, cost model, governor
+attachment) surfaces here even when the offline router loop stays green.
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import (make_closed_loop_router, run_record,
+                               run_scenario)
+from repro.configs.pool import PAPER_POOL, make_profile
+from repro.core.pool import ModelPool
+from repro.core.types import RouterConfig
+from repro.data import ENERGY_SCALE_WH, OutcomeSimulator
+from repro.data.scenarios import (duplicate_flood, flash_crowd,
+                                  mmpp_arrivals, poisson_arrivals,
+                                  pool_churn, steady)
+
+pytestmark = pytest.mark.scenario
+
+
+# -- generator determinism ----------------------------------------------------
+
+
+@pytest.mark.parametrize("gen", [steady, flash_crowd, duplicate_flood,
+                                 pool_churn])
+def test_generators_deterministic_under_seed(gen):
+    a = gen(per_task=10, seed=3)
+    b = gen(per_task=10, seed=3)
+    assert a.fingerprint() == b.fingerprint()
+    assert a.n_queries == b.n_queries
+    assert a.arrivals_s == b.arrivals_s
+    c = gen(per_task=10, seed=4)
+    assert a.fingerprint() != c.fingerprint()
+
+
+def test_arrival_processes_are_monotone_and_seeded():
+    for fn, kw in [(poisson_arrivals, dict(rate_qps=20.0)),
+                   (mmpp_arrivals, dict())]:
+        t = fn(200, seed=1, **kw)
+        assert len(t) == 200
+        assert all(b > a for a, b in zip(t, t[1:]))
+        assert t == fn(200, seed=1, **kw)
+        assert t != fn(200, seed=2, **kw)
+
+
+def test_mmpp_bursts_are_faster_than_calm():
+    t = np.asarray(mmpp_arrivals(2000, seed=0, calm_qps=5.0,
+                                 burst_qps=500.0))
+    gaps = np.diff(t)
+    # a two-state process this asymmetric must show both regimes
+    assert np.percentile(gaps, 10) < 1.0 / 100.0
+    assert np.percentile(gaps, 90) > 1.0 / 50.0
+
+
+def test_pool_churn_events_are_ordered_and_exclude_addition():
+    sc = pool_churn(per_task=10, seed=0)
+    kinds = [e.kind for e in sorted(sc.events, key=lambda e: e.t_s)]
+    assert kinds == ["kill", "add"]
+    add = next(e for e in sc.events if e.kind == "add")
+    assert sc.exclude == [add.model]
+    assert all(0.0 < e.t_s < sc.span_s for e in sc.events)
+
+
+# -- closed-loop economics (3 models x 200 queries through PoolServer) --------
+
+
+def _small_pool():
+    names = ("yi-34b", "phi-4-mini-4b", "qwen2.5-14b")
+    return ModelPool([make_profile(*r) for r in PAPER_POOL
+                      if r[0] in names])
+
+
+def test_closed_loop_greenserv_beats_random_on_acc_and_wh():
+    """The paper's headline ordering, end to end through the serving
+    stack: the pool mixes an expensive-and-weak arm (yi-34b) with cheap
+    and mid arms, so learning to avoid it wins both axes at once."""
+    scenario = steady(per_task=40, seed=0)
+    results = {}
+    for policy in ("greenserv", "random"):
+        router = make_closed_loop_router(
+            policy=policy, pool=_small_pool(),
+            config=RouterConfig(lam=0.4, seed=0,
+                                energy_scale_wh=ENERGY_SCALE_WH,
+                                max_arms=8))
+        results[policy] = run_scenario(
+            scenario, router, outcome_fn=OutcomeSimulator(seed=7),
+            seed=0, cache_mode="full", semantic_threshold=0.97)
+    gs, rnd = results["greenserv"], results["random"]
+    assert gs.completed == scenario.n_queries
+    assert rnd.completed == scenario.n_queries
+    assert gs.mean_accuracy >= rnd.mean_accuracy
+    assert gs.total_energy_wh < rnd.total_energy_wh
+
+
+def test_run_record_schema_is_uniform():
+    scenario = steady(per_task=5, seed=0)
+    router = make_closed_loop_router(pool=_small_pool(),
+                                     config=RouterConfig(
+                                         lam=0.4, seed=0,
+                                         energy_scale_wh=ENERGY_SCALE_WH,
+                                         max_arms=8),
+                                     fit_classifier=False)
+    res = run_scenario(scenario, router,
+                       outcome_fn=OutcomeSimulator(seed=7), seed=0,
+                       trace_every=5)
+    rec = run_record(res)
+    assert set(rec) == {"mean_accuracy", "total_energy_wh", "wh_per_query",
+                        "completed", "n_queries", "span_s", "avoided_wh",
+                        "stats", "trajectory"}
+    assert rec["completed"] == scenario.n_queries
+    traj = rec["trajectory"]
+    assert traj, "trajectory must not be empty"
+    keys = {"t_s", "completed", "joules", "inflight", "parked", "deferred",
+            "cache_hits", "lam"}
+    assert all(set(p) == keys for p in traj)
+    ts = [p["t_s"] for p in traj]
+    assert ts == sorted(ts)
+    assert traj[-1]["completed"] == scenario.n_queries
+
+
+# -- scenario invariants ------------------------------------------------------
+
+
+def test_flash_crowd_with_planner_never_livelocks():
+    """MMPP bursts ~10x past service rate with the budget governor and
+    the energy-aware admission planner on: admission pressure may slow
+    the pool but must never stop it (LivelockError would propagate)."""
+    scenario = flash_crowd(per_task=20, seed=0)
+    router = make_closed_loop_router(lam=0.4, seed=0)
+    res = run_scenario(scenario, router,
+                       outcome_fn=OutcomeSimulator(seed=7), seed=0,
+                       cache_mode="full", semantic_threshold=0.97,
+                       budget_wh_per_query=0.05, admission_planner=True)
+    assert res.completed == scenario.n_queries
+
+
+def test_duplicate_flood_hits_semantic_cache():
+    scenario = duplicate_flood(per_task=10, seed=0, n_hot=4, dup_factor=5)
+    router = make_closed_loop_router(lam=0.4, seed=0)
+    res = run_scenario(scenario, router,
+                       outcome_fn=OutcomeSimulator(seed=7), seed=0,
+                       cache_mode="full")
+    assert res.completed == scenario.n_queries
+    assert res.stats["cache_hits"] > 0
+
+
+def test_pool_churn_loses_no_requests():
+    """An engine killed mid-run and the held-out model joining via
+    add_engine: every query must still be answered, the kill must
+    surface as a restart, and the router must end with the grown pool."""
+    scenario = pool_churn(per_task=15, seed=0)
+    router = make_closed_loop_router(lam=0.4, seed=0,
+                                     exclude=scenario.exclude)
+    n_start = len(router.pool.names)
+    res = run_scenario(scenario, router,
+                       outcome_fn=OutcomeSimulator(seed=7), seed=0,
+                       cache_mode="full", semantic_threshold=0.97)
+    assert res.completed == scenario.n_queries
+    assert res.stats["restarts"] >= 1
+    assert len(router.pool.names) == n_start + 1
+    assert scenario.exclude[0] in router.pool.names
+
+
+# -- RouterBench classifier hoist (bench_routerbench fix) ---------------------
+
+
+def test_run_algorithm_hoisted_fit_matches_refit():
+    """The task classifier is fit once per sweep instead of once per WTP
+    point; with identical training data per point the scorecards must be
+    bitwise identical."""
+    from benchmarks.bench_routerbench import run_algorithm
+    hoisted = run_algorithm("linucb", wtps=(0.0, 0.4, 1.0), n_per_task=10,
+                            seed=0, refit_per_point=False)
+    refit = run_algorithm("linucb", wtps=(0.0, 0.4, 1.0), n_per_task=10,
+                          seed=0, refit_per_point=True)
+    assert hoisted == refit

@@ -201,6 +201,103 @@ def test_chunked_engine_decode_rides_along_with_prefill():
     assert {r.uid for r in done} == {0, 1}
 
 
+# -- SimEngine edge cases (the scenario lab's ModelEngine twin) ---------------
+
+
+def _sim_req(uid, submit_s=0.0, n_prompt=2):
+    return Request(query=Query(uid=uid, text=f"q{uid}"),
+                   prompt_tokens=list(range(1, n_prompt + 1)),
+                   max_new_tokens=4, submit_s=submit_s)
+
+
+def test_sim_engine_concurrency_drains_fifo():
+    prof = ModelProfile(name="sim", family="s", params_b=1.0)
+    eng = SimEngine(prof, lambda q, m: (0.5, 0.01, 10.0, 4), concurrency=2)
+    for i in range(5):
+        eng.submit(_sim_req(i))
+    assert eng.free_capacity == 0
+    assert [r.uid for r in eng.step()] == [0, 1]   # head slots drain first
+    assert [r.uid for r in eng.step()] == [2, 3]
+    assert eng.free_capacity == 1                  # one slot already free
+    assert [r.uid for r in eng.step()] == [4]
+    assert eng.pending == 0 and eng.free_capacity == 2
+
+
+def test_sim_engine_midqueue_cancel_frees_slot_same_tick():
+    """A CANCELLED request sitting mid-queue (a hedge loser) must be
+    dropped in place, freeing its slot for the next waiter on the *same*
+    tick, with its pinned outcome discarded and never completed."""
+    prof = ModelProfile(name="sim", family="s", params_b=1.0)
+    calls = []
+
+    def outcome(query, model):
+        calls.append(query.uid)
+        return 0.5, 0.01, 10.0, 4
+    eng = SimEngine(prof, outcome, steps_per_query=3, concurrency=2)
+    reqs = [_sim_req(i) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()                        # uids 0,1 hold the two slots
+    assert calls == [0, 1]
+    reqs[1].state = RequestState.CANCELLED
+    eng.step()                        # drop 1 mid-queue...
+    assert calls == [0, 1, 2]         # ...and 2 activates the same tick
+    assert [r.uid for r in eng.queue] == [0, 2]
+    done = []
+    for _ in range(4):
+        done += eng.step()
+    assert [r.uid for r in done] == [0, 2]
+    assert calls == [0, 1, 2]         # outcome drawn once per request
+
+
+def test_sim_engine_steps_per_query_paces_completion_and_clock():
+    prof = ModelProfile(name="sim", family="s", params_b=1.0)
+    eng = SimEngine(prof, lambda q, m: (0.5, 0.02, 80.0, 4),
+                    steps_per_query=4)
+    eng.submit(_sim_req(0))
+    for _ in range(3):
+        assert eng.step() == []       # in service, not yet done
+    assert [r.uid for r in eng.step()] == [0]   # exactly step 4
+    # each tick advances modeled time by latency/steps: 4 x 20 ms
+    assert eng.modeled_time_s() == pytest.approx(0.080)
+    assert eng.step() == []           # idle tick leaves the clock alone
+    assert eng.modeled_time_s() == pytest.approx(0.080)
+
+
+def test_sim_engine_injectable_clock_stamps_virtual_time():
+    """With an injected clock the lifecycle stamps live on the bench's
+    virtual timeline, so queue_ms reflects modeled wait, not wall time."""
+    clk = {"t": 50.0}
+    prof = ModelProfile(name="sim", family="s", params_b=1.0)
+    eng = SimEngine(prof, lambda q, m: (0.5, 0.01, 10.0, 4),
+                    clock=lambda: clk["t"])
+    req = _sim_req(0, submit_s=47.5)
+    eng.submit(req)
+    clk["t"] = 53.5
+    resp = eng.step()[0]
+    assert req.start_s == 53.5 and req.finish_s == 53.5
+    assert resp.queue_ms == pytest.approx(6000.0)
+
+
+def test_single_engine_failure_recovers_and_serves_again():
+    """EngineFailure on one pool member: PoolServer must surface it as a
+    restart, re-route that engine's inflight work without losing any
+    response, and return the engine to service."""
+    server, engines = _sim_server(n_models=3, steps_per_query=4)
+    qs = make_stream(per_task=2)[:6]
+    reqs = [server.submit(q) for q in qs]
+    victim = reqs[0].model_name
+    on_victim = {r.uid for r in engines[victim].queue}
+    assert on_victim
+    engines[victim].inject_failure()
+    server.step()
+    assert server.stats["restarts"] == 1
+    server.run_until_drained(max_steps=500)
+    assert len(server.responses) == 6
+    assert on_victim <= set(server.responses)
+    engines[victim].step()            # restarted: stepping no longer raises
+
+
 def test_real_engine_through_server():
     eng = _real_engine()
     pool = ModelPool([eng.profile])
