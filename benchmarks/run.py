@@ -25,8 +25,9 @@ def main() -> None:
                             bench_energy_model, bench_features,
                             bench_kernels, bench_lambda_sweep,
                             bench_model_addition, bench_overhead,
-                            bench_prefill, bench_routerbench,
-                            bench_scenarios, bench_telemetry, roofline)
+                            bench_pool_scale, bench_prefill,
+                            bench_routerbench, bench_scenarios,
+                            bench_telemetry, roofline)
 
     def section(title, fn):
         t0 = time.time()
@@ -70,6 +71,10 @@ def main() -> None:
     section("Disaggregated serving: tail TTFT + joules vs monolithic",
             lambda: bench_disagg.main(n_users=240 if args.fast else 2000,
                                       smoke=args.fast, artifact=None))
+    section("Fleet: sharded-pool weak scaling under a shard kill",
+            lambda: bench_pool_scale.main(
+                per_shard=100 if args.fast else 250,
+                smoke=args.fast, artifact=None))
     section("Energy cost model: forecast MAE + routing non-regression",
             lambda: bench_energy_model.main(
                 n_queries=48 if args.fast else 120, smoke=args.fast,

@@ -41,7 +41,7 @@ JAX_VERSION: Tuple[int, ...] = tuple(
 __all__ = [
     "JAX_VERSION", "tree_flatten_with_path", "path_str",
     "tpu_compiler_params", "auto_axis_types", "make_mesh", "set_mesh",
-    "cost_analysis", "shard_map",
+    "cost_analysis", "shard_map", "donation_kwargs",
 ]
 
 
@@ -162,3 +162,24 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
     from jax.experimental.shard_map import shard_map as _legacy
     return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                    check_rep=check_vma)
+
+
+# ---------------------------------------------------------------------------
+# Buffer donation
+# ---------------------------------------------------------------------------
+
+
+def donation_kwargs(*argnums: int) -> dict:
+    """``jax.jit`` donation kwargs for state-carrying jitted programs.
+
+    Buffer donation (input aliased to output, no copy) is implemented on
+    TPU/GPU but not on CPU, where XLA emits a warning per traced call —
+    so on CPU this returns no kwargs and the jit simply copies.  Callers
+    splat the result: ``jax.jit(f, **compat.donation_kwargs(0))``.  Only
+    donate arguments the caller immediately replaces with the call's
+    output (e.g. a ``BanditState`` threaded through update, the k-means
+    device tuple) — a donated input buffer is dead after the call.
+    """
+    if jax.default_backend() in ("tpu", "gpu", "cuda", "rocm"):
+        return {"donate_argnums": tuple(argnums)}
+    return {}

@@ -60,6 +60,12 @@ def build_paper_pool(exclude: Optional[List[str]] = None) -> ModelPool:
     """The 16-arm pool of the paper's experiments (optionally holding models
     out for the §6.2.4 addition experiment)."""
     exclude = set(exclude or [])
+    unknown = exclude - {row[0] for row in PAPER_POOL}
+    if unknown:
+        # a typo'd exclude silently running the full 16-model pool is a
+        # miscalibrated experiment, not a smaller one — fail loudly
+        raise ValueError(f"exclude names not in PAPER_POOL: "
+                         f"{sorted(unknown)}")
     return ModelPool([make_profile(*row) for row in PAPER_POOL
                       if row[0] not in exclude])
 

@@ -27,7 +27,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+from repro.core.residency import TransferLedger
 from repro.core.types import RouterConfig
+from repro.kernels.featurize.ops import pad_pow2
 from repro.kernels.linucb.ops import linucb_scores as linucb_scores_kernel
 
 NEG_INF = -1e30
@@ -182,6 +185,63 @@ def make_select_fn(config: RouterConfig):
     return select
 
 
+def make_select_batch_scan_fn(config: RouterConfig):
+    """Returns jitted select_batch(state, X, feasible, valid) →
+    (arms, masked scores, state) for the policies the fused LinUCB kernel
+    cannot serve (CTS posterior draws, ε-greedy exploration, the
+    per-decision Cholesky mode).
+
+    One ``lax.scan`` over the batch with *exact* sequential semantics:
+    each row repeats ``make_select_fn``'s body — the same
+    ``jax.random.split(key, 3)``, the same score arithmetic, the same
+    masked argmax — so Q rows leave the state (PRNG key included)
+    bit-identical to Q successive ``select`` calls.  ``valid`` marks real
+    rows: callers pad Q to a power of two to bound the compiled variants,
+    and a padding row must not consume a draw (the key only advances on
+    valid rows), or batched and sequential selection would diverge.
+
+    The state threads through and is replaced by the output, so its
+    buffers are donated where the backend supports it — batched CTS
+    selection allocates no second copy of A/A⁻¹/θ on device.
+    """
+    algo = config.algorithm
+    alpha = config.alpha_ucb
+    sigma = config.cts_sigma
+    solve_mode = config.solve_mode
+
+    def step(state: BanditState, xs):
+        x, feasible, v = xs
+        mask = state.active & feasible
+        key, k_sel, k_eps = jax.random.split(state.key, 3)
+        if algo == "linucb":
+            scores = linucb_scores(state, x, alpha, solve_mode)
+            arm = jnp.argmax(_masked(scores, mask))
+        elif algo == "cts":
+            scores = thompson_scores(state, x, sigma, k_sel)
+            arm = jnp.argmax(_masked(scores, mask))
+        elif algo in ("eps_greedy", "eps_greedy_ctx"):
+            scores = (greedy_ctx_scores(state, x) if algo == "eps_greedy_ctx"
+                      else greedy_plain_scores(state))
+            greedy_arm = jnp.argmax(_masked(scores, mask))
+            probs = mask / jnp.maximum(jnp.sum(mask), 1)
+            rand_arm = jax.random.choice(k_sel, mask.shape[0], p=probs)
+            explore = jax.random.uniform(k_eps) < state.eps
+            arm = jnp.where(explore, rand_arm, greedy_arm)
+        else:
+            raise ValueError(f"unknown algorithm {algo!r}")
+        return (state._replace(key=jnp.where(v, key, state.key)),
+                (arm, _masked(scores, mask)))
+
+    @functools.partial(jax.jit, **compat.donation_kwargs(0))
+    def select_batch(state: BanditState, X: jax.Array, feasible: jax.Array,
+                     valid: jax.Array):
+        state, (arms, masked) = jax.lax.scan(step, state,
+                                             (X, feasible, valid))
+        return arms, masked, state
+
+    return select_batch
+
+
 def make_update_fn(config: RouterConfig):
     """Returns jitted update(state, arm, x, r) -> state.
 
@@ -193,7 +253,9 @@ def make_update_fn(config: RouterConfig):
     decay = config.epsilon_decay
     eps_min = config.epsilon_min
 
-    @jax.jit
+    # the state is threaded through and replaced by the caller, so its
+    # buffers are donated where the backend supports it (compat helper)
+    @functools.partial(jax.jit, **compat.donation_kwargs(0))
     def update(state: BanditState, arm: jax.Array, x: jax.Array,
                r: jax.Array) -> BanditState:
         A_m = state.A[arm] + jnp.outer(x, x)
@@ -230,6 +292,11 @@ class BanditPolicy:
         self.state = init_state(config, n_arms)
         self._select = make_select_fn(config)
         self._update = make_update_fn(config)
+        self._select_batch_scan = None   # built on first stochastic batch
+        # residency audit: BanditState lives on device; the ledger counts
+        # the deliberate host syncs (state_dict / load / rescalarize) so
+        # tests can assert routing itself moves no bandit state
+        self.transfers = TransferLedger()
 
     @property
     def n_arms(self) -> int:
@@ -252,8 +319,11 @@ class BanditPolicy:
         batch is scored by one fused kernel call and an argmax per row —
         arm choices are identical to Q sequential ``select`` calls on the
         same state.  Stochastic policies (CTS, ε-greedy) and the
-        per-decision Cholesky mode keep sequential per-query semantics
-        (each query must consume its own PRNG draw / solve).
+        per-decision Cholesky mode keep sequential per-query *semantics*
+        (each query consumes its own PRNG draw / solve) but run as one
+        jitted ``lax.scan`` (``make_select_batch_scan_fn``) — decisions
+        and the final PRNG key are identical to the sequential loop, and
+        the bandit state never leaves the device.
         """
         X = np.asarray(X, dtype=np.float32)
         feas = np.asarray(feasible, dtype=bool)
@@ -272,11 +342,21 @@ class BanditPolicy:
             arms = np.argmax(masked, axis=1)
             self.advance_key()
             return arms.astype(np.int64), masked.astype(np.float32)
-        arms = np.zeros(q, dtype=np.int64)
-        masked = np.zeros((q, m), dtype=np.float32)
-        for i in range(q):
-            arms[i], masked[i] = self.select(X[i], feas[i])
-        return arms, masked
+        if self._select_batch_scan is None:
+            self._select_batch_scan = make_select_batch_scan_fn(self.config)
+        # Q padded to a power of two (bounded jit variants); padding rows
+        # are marked invalid so they never advance the PRNG key
+        q_pad = pad_pow2(q)
+        x_pad = np.zeros((q_pad, X.shape[1]), np.float32)
+        x_pad[:q] = X
+        feas_pad = np.zeros((q_pad, m), bool)
+        feas_pad[:q] = feas
+        valid = np.arange(q_pad) < q
+        arms, masked, self.state = self._select_batch_scan(
+            self.state, jnp.asarray(x_pad), jnp.asarray(feas_pad),
+            jnp.asarray(valid))
+        return (np.asarray(arms, dtype=np.int64)[:q],
+                np.asarray(masked, dtype=np.float32)[:q])
 
     def advance_key(self) -> None:
         """Advance the PRNG key so a batched selection is not a state no-op
@@ -307,14 +387,18 @@ class BanditPolicy:
         """
         b = np.asarray(b, dtype=np.float32)
         a_inv = np.asarray(self.state.A_inv)
+        self.transfers.count_d2h()
         theta = np.einsum("mij,mj->mi", a_inv, b)
         self.state = self.state._replace(
             b=jnp.asarray(b),
             theta=jnp.asarray(theta.astype(np.float32)),
             reward_sum=jnp.asarray(np.asarray(reward_sum, np.float32)))
+        self.transfers.count_h2d()
 
     def state_dict(self) -> dict:
+        self.transfers.count_d2h()
         return {k: np.asarray(v) for k, v in self.state._asdict().items()}
 
     def load_state_dict(self, d: dict) -> None:
+        self.transfers.count_h2d()
         self.state = BanditState(**{k: jnp.asarray(v) for k, v in d.items()})

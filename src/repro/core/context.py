@@ -34,7 +34,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core.embedding import EmbeddingModel, tokenize
+from repro.core.residency import TransferLedger
 from repro.core.types import ContextVector, N_TASKS, RouterConfig
 
 
@@ -140,75 +142,138 @@ class TaskClassifier:
 
 
 class OnlineKMeans:
-    """Online k-means with cosine assignment and decaying-rate updates."""
+    """Online k-means with cosine assignment and decaying-rate updates.
+
+    Holds TWO synchronized copies of (centroids, counts, initialized):
+
+      * the host numpy mirror — the Eq. 9–10 reference implementation
+        (``assign``/``update``) and what ``state_dict`` serializes;
+      * a cached device tuple — what the router's fused decision program
+        reads and writes.  ``load_device_state`` just swaps the cached
+        tuple (no download), so steady-state device routing moves *no*
+        k-means state across the host↔device boundary; the host mirror is
+        refreshed lazily (``_sync_host``) only when something reads it.
+
+    ``transfers`` counts every actual upload/download of this state —
+    the fleet residency convention's audit trail (core/residency.py).
+    """
 
     def __init__(self, k: int, dim: int):
         if k < 1:
             raise ValueError("k must be >= 1")
         self.k = k
         self.dim = dim
-        self.centroids = np.zeros((k, dim), dtype=np.float32)
-        self.counts = np.zeros((k,), dtype=np.int64)
-        self._initialized = 0  # first K distinct embeddings seed the centroids
+        self._h_centroids = np.zeros((k, dim), dtype=np.float32)
+        self._h_counts = np.zeros((k,), dtype=np.int64)
+        self._h_init = 0  # first K distinct embeddings seed the centroids
+        # device residency: cached (centroids f32, counts f32, init i32)
+        # tuple, or None when the host mirror is newer / nothing uploaded
+        self._dev: Optional[tuple] = None
+        self._host_stale = False     # device copy has updates host lacks
+        self.transfers = TransferLedger()
+
+    # -- host/device mirror plumbing ----------------------------------------
+
+    def _sync_host(self) -> None:
+        """Refresh the host mirror from the device copy (one download)."""
+        if self._host_stale:
+            cent, cnt, ini = self._dev
+            self._h_centroids = np.asarray(cent, dtype=np.float32).copy()
+            self._h_counts = np.asarray(np.rint(np.asarray(cnt)),
+                                        dtype=np.int64)
+            self._h_init = int(ini)
+            self._host_stale = False
+            self.transfers.count_d2h()
+
+    def _invalidate_device(self) -> None:
+        """Host-side mutation: drop the (now stale) device copy."""
+        self._dev = None
+
+    @property
+    def centroids(self) -> np.ndarray:
+        self._sync_host()
+        return self._h_centroids
+
+    @property
+    def counts(self) -> np.ndarray:
+        self._sync_host()
+        return self._h_counts
+
+    @property
+    def _initialized(self) -> int:
+        self._sync_host()
+        return self._h_init
 
     def assign(self, e: np.ndarray) -> int:
         """Eq. 9: argmax_c cos(e, mu_c) over initialized centroids."""
-        live = max(self._initialized, 1)
-        c = self.centroids[:live]
+        self._sync_host()
+        live = max(self._h_init, 1)
+        c = self._h_centroids[:live]
         norms = np.linalg.norm(c, axis=1) * max(np.linalg.norm(e), 1e-12)
         sims = (c @ e) / np.maximum(norms, 1e-12)
         return int(np.argmax(sims))
 
     def update(self, e: np.ndarray) -> int:
         """Assign, then apply the Eq. 10 incremental centroid update."""
+        self._sync_host()
+        self._invalidate_device()
         e = np.asarray(e, dtype=np.float32)
-        if self._initialized < self.k:
+        if self._h_init < self.k:
             # seed from the first K distinct embeddings (paper §4.2.2)
-            for i in range(self._initialized):
-                if np.allclose(self.centroids[i], e, atol=1e-6):
+            for i in range(self._h_init):
+                if np.allclose(self._h_centroids[i], e, atol=1e-6):
                     break
             else:
-                idx = self._initialized
-                self.centroids[idx] = e
-                self.counts[idx] = 1
-                self._initialized += 1
+                idx = self._h_init
+                self._h_centroids[idx] = e
+                self._h_counts[idx] = 1
+                self._h_init += 1
                 return idx
         c = self.assign(e)
-        n = self.counts[c]
-        self.centroids[c] += (e - self.centroids[c]) / (n + 1)
-        self.counts[c] += 1
+        n = self._h_counts[c]
+        self._h_centroids[c] += (e - self._h_centroids[c]) / (n + 1)
+        self._h_counts[c] += 1
         return c
 
     def state_dict(self) -> dict:
-        return {"centroids": self.centroids.copy(), "counts": self.counts.copy(),
-                "initialized": self._initialized}
+        self._sync_host()
+        return {"centroids": self._h_centroids.copy(),
+                "counts": self._h_counts.copy(),
+                "initialized": self._h_init}
 
     def load_state_dict(self, d: dict) -> None:
-        self.centroids = np.asarray(d["centroids"], dtype=np.float32).copy()
-        self.counts = np.asarray(d["counts"], dtype=np.int64).copy()
-        self._initialized = int(d["initialized"])
+        self._host_stale = False
+        self._invalidate_device()
+        self._h_centroids = np.asarray(d["centroids"], dtype=np.float32).copy()
+        self._h_counts = np.asarray(d["counts"], dtype=np.int64).copy()
+        self._h_init = int(d["initialized"])
 
     # -- device path (fused featurize→score pipeline) -----------------------
 
     def device_state(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
         """(centroids, counts, initialized) as device arrays for the jitted
         Eq. 9–10 replay (counts as float32: exact for any realistic stream,
-        and the Eq. 10 step divides by them)."""
-        return (jnp.asarray(self.centroids),
-                jnp.asarray(self.counts, jnp.float32),
-                jnp.int32(self._initialized))
+        and the Eq. 10 step divides by them).  Cached: uploads once after a
+        host-side mutation, then returns the resident tuple for free."""
+        if self._dev is None:
+            self._dev = (jnp.asarray(self._h_centroids),
+                         jnp.asarray(self._h_counts, jnp.float32),
+                         jnp.int32(self._h_init))
+            self.transfers.count_h2d()
+        return self._dev
 
     def load_device_state(self, centroids, counts, initialized) -> None:
-        """Write a jitted update's state back into the host mirror."""
-        self.centroids = np.asarray(centroids, dtype=np.float32).copy()
-        self.counts = np.asarray(np.rint(np.asarray(counts)), dtype=np.int64)
-        self._initialized = int(initialized)
+        """Adopt a jitted update's output arrays as the resident state.
+        No download happens here — the host mirror is marked stale and
+        refreshed lazily on its next read."""
+        self._dev = (centroids, counts, initialized)
+        self._host_stale = True
 
     def update_batch_device(self, embs: np.ndarray) -> np.ndarray:
-        """Assign + update a whole batch on device (one jitted scan) and
-        sync the state back; returns (Q,) cluster ids.  Semantically
-        identical to Q sequential ``update`` calls — the scan replays the
-        Eq. 10 centroid shifts in arrival order."""
+        """Assign + update a whole batch on device (one jitted scan),
+        keeping the state device-resident; returns (Q,) cluster ids.
+        Semantically identical to Q sequential ``update`` calls — the
+        scan replays the Eq. 10 centroid shifts in arrival order."""
         cent, cnt, ini = self.device_state()
         cent, cnt, ini, clusters = _kmeans_scan_jit(
             cent, cnt, ini, jnp.asarray(embs, jnp.float32))
@@ -285,7 +350,11 @@ def kmeans_assign_batch(centroids, initialized, embs):
     return jnp.argmax(sims, axis=1).astype(jnp.int32)
 
 
-_kmeans_scan_jit = jax.jit(kmeans_update_scan)
+# the resident (centroids, counts, initialized) tuple threads through and
+# is immediately replaced by the outputs, so the buffers are donated where
+# the backend supports it (no-op copy on CPU — compat.donation_kwargs)
+_kmeans_scan_jit = jax.jit(kmeans_update_scan,
+                           **compat.donation_kwargs(0, 1, 2))
 
 
 def _pad_cols(a: np.ndarray, width: int, fill) -> np.ndarray:

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core.bandits import NEG_INF, BanditPolicy
 from repro.core.context import (ContextGenerator, _sync,
                                 kmeans_update_scan)
@@ -43,9 +44,15 @@ from repro.kernels.linucb import linucb_scores
 _PRED_COST_BETA = 0.1
 
 
+# args 7-9 are the resident k-means tuple: the call returns the updated
+# centroids/counts/init which the caller adopts via load_device_state, so
+# the input buffers are donated where the backend implements it (with
+# clustering ablated the caller passes placeholder zeros — a donated
+# buffer is dead after the call, and the live tuple must survive)
 @functools.partial(jax.jit, static_argnames=(
     "mode", "use_task", "use_cluster", "use_complexity", "n_tasks",
-    "n_clusters", "n_bins", "alpha"))
+    "n_clusters", "n_bins", "alpha"),
+    **compat.donation_kwargs(7, 8, 9))
 def _fused_decide(ids, weights, emb_in, labels_in, proj, w_clf, b_clf,
                   centroids, kcounts, kinit, comp_counts, comp_lo,
                   comp_width, feasible, valid, a_inv, theta, active, *,
@@ -420,7 +427,16 @@ class GreenServRouter:
         feasible = self._feasible_matrix(queries)
         feas_pad = np.zeros((q_pad, self.config.max_arms), bool)
         feas_pad[:n, : feasible.shape[1]] = feasible
-        cent, cnt, ini = ctx.kmeans.device_state()
+        if ctx.use_cluster:
+            cent, cnt, ini = ctx.kmeans.device_state()
+        else:
+            # placeholders: the fused call donates the k-means buffers and
+            # only use_cluster=True adopts the outputs — passing the live
+            # resident tuple here would leave it pointing at dead buffers
+            km = ctx.kmeans
+            cent = jnp.zeros((km.k, km.dim), jnp.float32)
+            cnt = jnp.zeros((km.k,), jnp.float32)
+            ini = jnp.int32(0)
         w_clf, b_clf = ctx.classifier_params()
         st = self.policy.state
         out = _fused_decide(
@@ -518,8 +534,18 @@ class GreenServRouter:
         return np.asarray(self.policy.state.counts)[: len(self.pool)]
 
     def state_dict(self) -> dict:
+        """Serialize the full routing state — every policy variant.
+
+        The bandit dict carries the whole ``BanditState`` (CTS's PRNG key
+        and the Cholesky mode's A matrices included), the context dict
+        forces the k-means device→host sync, and ``lam`` pins the
+        scalarization the posterior was built under, so a restored router
+        routes identically to the one that saved
+        (tests/test_fleet.py::test_state_dict_route_equivalence).
+        """
         return {"bandit": self.policy.state_dict(),
                 "context": self.context.state_dict(),
+                "lam": float(self.config.lam),
                 "n_routed": self.n_routed,
                 "decomposed": {"b_acc": self._b_acc.copy(),
                                "b_cost": self._b_cost.copy(),
@@ -531,6 +557,12 @@ class GreenServRouter:
     def load_state_dict(self, d: dict) -> None:
         self.policy.load_state_dict(d["bandit"])
         self.context.load_state_dict(d["context"])
+        lam = d.get("lam")
+        if lam is not None:
+            # restore λ directly (no rescalarize — the loaded posterior
+            # was already built under it; rebuilding from the decomposed
+            # sums below would be a no-op modulo float noise)
+            self.config.lam = float(lam)
         self.n_routed = int(d.get("n_routed", 0))
         dec = d.get("decomposed")
         if dec is not None:

@@ -15,27 +15,45 @@ import numpy as np
 
 @dataclasses.dataclass
 class Heartbeat:
+    """One liveness track.  ``clock`` is injectable (default wall-clock
+    ``time.monotonic``) so virtual-clock harnesses — the scenario lab,
+    the fleet controller's shard liveness — can drive staleness from
+    modeled time instead of sleeping through real timeouts."""
+
     name: str
-    last_beat: float = dataclasses.field(default_factory=time.monotonic)
+    clock: Callable[[], float] = time.monotonic
+    last_beat: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        if self.last_beat is None:
+            self.last_beat = self.clock()
 
     def beat(self) -> None:
-        self.last_beat = time.monotonic()
+        self.last_beat = self.clock()
 
     def stale(self, timeout_s: float) -> bool:
-        return (time.monotonic() - self.last_beat) > timeout_s
+        return (self.clock() - self.last_beat) > timeout_s
 
 
 class HeartbeatMonitor:
-    """Tracks many heartbeats; reports the stale set."""
+    """Tracks many heartbeats; reports the stale set.  All registered
+    beats share the monitor's (injectable) clock."""
 
-    def __init__(self, timeout_s: float):
+    def __init__(self, timeout_s: float,
+                 clock: Callable[[], float] = time.monotonic):
         self.timeout_s = timeout_s
+        self.clock = clock
         self._beats: Dict[str, Heartbeat] = {}
 
     def register(self, name: str) -> Heartbeat:
-        hb = Heartbeat(name)
+        hb = Heartbeat(name, clock=self.clock)
         self._beats[name] = hb
         return hb
+
+    def deregister(self, name: str) -> None:
+        """Stop tracking ``name`` (e.g. a shard already failed over) —
+        a dead entry would otherwise report stale forever."""
+        self._beats.pop(name, None)
 
     def beat(self, name: str) -> None:
         self._beats[name].beat()

@@ -1,0 +1,24 @@
+"""Fleet subsystem: device-resident router state + sharded engine pools.
+
+Two halves (docs/FLEET.md):
+
+* residency — ``route_batch`` keeps all learning state (bandit
+  sufficient statistics, k-means centroids, CTS posterior draws) on
+  device across batches; ``TransferLedger`` (re-exported from
+  ``repro.core.residency``) is the audit trail proving zero per-call
+  host↔device state transfer;
+* scale-out — ``plan_fleet`` partitions devices into shards, each a full
+  pool replica behind its own ``PoolServer``; ``FleetController``
+  load-balances, all-reduces feedback statistics (exact — they are
+  additive), and fails shards over without losing requests.
+"""
+from repro.core.residency import TransferLedger
+from repro.fleet.plan import (FleetPlan, ShardSpec, base_model_name,
+                              plan_fleet)
+from repro.fleet.sync import FeedbackAllReduce
+from repro.fleet.controller import (FleetController, FleetShard,
+                                    build_fleet, drive_fleet)
+
+__all__ = ["TransferLedger", "FleetPlan", "ShardSpec", "base_model_name",
+           "plan_fleet", "FeedbackAllReduce", "FleetController",
+           "FleetShard", "build_fleet", "drive_fleet"]

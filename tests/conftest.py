@@ -33,6 +33,11 @@ def pytest_configure(config):
         "scenario: scenario-lab tests — generator determinism, closed-loop "
         "GreenServ-vs-random economics, flash-crowd liveness, pool-churn "
         "durability (run the subset with -m scenario)")
+    config.addinivalue_line(
+        "markers",
+        "fleet: fleet subsystem tests — device-resident router state "
+        "(zero-transfer routing), sharded pool all-reduce, heartbeat "
+        "fail-over, fleet checkpointing (run the subset with -m fleet)")
 
 
 @pytest.fixture(scope="session")

@@ -143,3 +143,59 @@ def test_router_state_checkpoints_with_same_machinery(tmp_path):
     assert extra["n_routed"] == 5
     np.testing.assert_allclose(np.asarray(blob["counts"]),
                                r.state_dict()["bandit"]["counts"])
+
+
+def test_restore_explicit_step(tmp_path):
+    ckpt.save(tmp_path, 1, {"w": jnp.ones((2,))})
+    ckpt.save(tmp_path, 2, {"w": jnp.full((2,), 9.0)})
+    assert ckpt.latest_step(tmp_path) == 2
+    old, _ = ckpt.restore(tmp_path, {"w": jnp.zeros((2,))}, step=1)
+    np.testing.assert_array_equal(np.asarray(old["w"]), np.ones(2))
+    new, _ = ckpt.restore(tmp_path, {"w": jnp.zeros((2,))})
+    np.testing.assert_array_equal(np.asarray(new["w"]), np.full(2, 9.0))
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    ckpt.save(tmp_path, 1, {"w": jnp.zeros((2,))})
+    with pytest.raises(KeyError):
+        ckpt.restore(tmp_path, {"w": jnp.zeros((2,)),
+                                "extra": jnp.zeros((3,))})
+
+
+def test_train_watchdog_restart_policy(tmp_path):
+    from repro.distributed.fault import TrainWatchdog
+    wd = TrainWatchdog(checkpoint_dir=str(tmp_path), max_restarts=2)
+    # failure before the first checkpoint is unrecoverable
+    with pytest.raises(RuntimeError):
+        wd.on_failure()
+    ckpt.save(tmp_path, 3, {"w": jnp.zeros((2,))})
+    assert wd.should_restart()
+    assert wd.on_failure() == 3            # restore target = newest step
+    assert not wd.should_restart()         # budget (2) exhausted
+
+
+def test_cost_model_state_checkpoints_with_same_machinery(tmp_path):
+    """The predictive energy model rides distributed.checkpoint next to
+    the router state (the fleet controller saves both)."""
+    from repro.costmodel.model import EnergyCostModel
+    cm = EnergyCostModel()
+    for name in ("m0", "m1"):
+        cm.register_engine(name)
+    state = cm.state_dict()
+    ckpt.save(tmp_path, 1, state)
+    like = jax.tree.map(np.zeros_like, state)
+    blob, _ = ckpt.restore(tmp_path, like)
+    cm2 = EnergyCostModel()
+    cm2.load_state_dict(blob)
+    assert set(cm2.engines) == {"m0", "m1"}
+    sd1, sd2 = cm.state_dict(), cm2.state_dict()
+    for a, b in zip(jax.tree.leaves(sd1), jax.tree.leaves(sd2)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=1e-6)
+
+
+def test_remesh_model_axis_unsatisfiable_raises():
+    from repro.launch.mesh import make_mesh
+    m = make_mesh((1, 1), ("data", "model"))
+    # losing the only chip leaves nothing to host the model axis
+    with pytest.raises(ValueError):
+        plan_remesh(m, lost_chips=1)
