@@ -267,6 +267,7 @@ class ClosedLoopResult:
     avoided_wh: float                   # prefix-KV reuse credit (engines)
     server: object
     telemetry: object
+    failed: int = 0                     # terminal TIMED_OUT/FAILED uids
 
 
 def run_record(result: ClosedLoopResult) -> dict:
@@ -277,6 +278,7 @@ def run_record(result: ClosedLoopResult) -> dict:
         "wh_per_query": float(result.total_energy_wh
                               / max(result.completed, 1)),
         "completed": int(result.completed),
+        "failed": int(result.failed),
         "n_queries": int(result.n_queries),
         "span_s": float(result.span_s),
         "avoided_wh": float(result.avoided_wh),
@@ -311,6 +313,7 @@ def run_scenario(scenario: Scenario, router: GreenServRouter,
                  use_cost_model: bool = True,
                  hedge_after_steps: Optional[int] = None,
                  engine_factory: Optional[Callable] = None,
+                 server_kwargs: Optional[dict] = None,
                  trace_every: int = 25,
                  max_steps: int = 250_000) -> ClosedLoopResult:
     """Drive one scenario through the full closed loop on a virtual clock.
@@ -327,10 +330,16 @@ def run_scenario(scenario: Scenario, router: GreenServRouter,
     scenario (budget = per-query × n_queries) with the scenario's
     ``carbon_fn``; ``admission_planner`` additionally gates admission on
     its headroom.  ``engine_factory(profile, clock)`` overrides SimEngine
-    construction for non-paper pools (RouterBench tables)."""
+    construction for non-paper pools (RouterBench tables).
+
+    ``server_kwargs`` passes extra PoolServer knobs straight through —
+    the reliability layer rides in here (``deadline_s``, ``max_retries``,
+    ``retry_backoff_steps``, ``breaker_config``).  When the scenario
+    carries a ``faults`` plan, each named engine is wrapped in a seeded
+    ``FaultInjector`` before the drive starts (docs/RELIABILITY.md)."""
     from repro.cache import GreenCache
     from repro.costmodel import EnergyCostModel
-    from repro.serving import PoolServer, SimEngine
+    from repro.serving import FaultInjector, PoolServer, SimEngine
     from repro.telemetry.budget import EnergyBudgetGovernor
     from repro.telemetry.hub import Telemetry
 
@@ -344,6 +353,10 @@ def run_scenario(scenario: Scenario, router: GreenServRouter,
     pool = router.pool
     engines = {pool[i].name: engine_factory(pool[i], clock)
                for i in range(len(pool))}
+    for eng_name, faults in (scenario.faults or {}).items():
+        if eng_name in engines and faults:
+            engines[eng_name] = FaultInjector(engines[eng_name], faults,
+                                              clock=clock)
     cache = (GreenCache(mode=cache_mode,
                         semantic_threshold=semantic_threshold, clock=clock)
              if cache_mode != "off" else None)
@@ -362,7 +375,7 @@ def run_scenario(scenario: Scenario, router: GreenServRouter,
         # virtual idle-jumps can cross any wall-style timeout in one tick;
         # engine failures still surface through the _failed flag
         heartbeat_timeout_s=1e18,
-        clock=clock)
+        clock=clock, **(server_kwargs or {}))
     queries, arrivals = scenario.queries, scenario.arrivals_s
     events = sorted(scenario.events, key=lambda e: e.t_s)
     arr_i = ev_i = steps = 0
@@ -372,12 +385,21 @@ def run_scenario(scenario: Scenario, router: GreenServRouter,
     def sample() -> dict:
         return {"t_s": round(clk["t"], 6),
                 "completed": len(server.responses),
+                "failed": len(server.failed),
                 "joules": round(sum(e.cumulative_joules()
                                     for e in server.engines.values()), 6),
                 "inflight": len(server.inflight),
                 "parked": len(server.arrivals),
                 "deferred": int(server.stats["deferred"]),
                 "cache_hits": int(server.stats["cache_hits"]),
+                "retries": int(server.stats["retries"]),
+                "timeouts": int(server.stats["timeouts"]),
+                "breaker_opens": int(server.stats["breaker_opens"]),
+                # cumulative routing decisions per arm — the chaos bench
+                # differences consecutive samples to show the breaker
+                # shifting share off a faulty engine mid-run
+                "selections": {n: int(c) for n, c
+                               in sorted(server.dispatch_counts.items())},
                 "lam": float(router.config.lam)}
 
     while arr_i < len(queries) or server.inflight or server.arrivals:
@@ -387,7 +409,7 @@ def run_scenario(scenario: Scenario, router: GreenServRouter,
                 f"scenario {scenario.name!r}: {len(server.inflight)} in "
                 f"flight, {len(server.arrivals)} parked, "
                 f"{len(queries) - arr_i} future arrivals after "
-                f"{max_steps} steps")
+                f"{max_steps} steps\n" + server.drain_snapshot())
         # pool events fire once the virtual clock passes them
         while ev_i < len(events) and events[ev_i].t_s <= clk["t"]:
             ev = events[ev_i]
@@ -430,4 +452,5 @@ def run_scenario(scenario: Scenario, router: GreenServRouter,
         total_energy_wh=float(wh), completed=len(server.responses),
         n_queries=scenario.n_queries, span_s=float(clk["t"]),
         stats=dict(server.stats), trajectory=trajectory,
-        avoided_wh=float(avoided), server=server, telemetry=telemetry)
+        avoided_wh=float(avoided), server=server, telemetry=telemetry,
+        failed=len(server.failed))

@@ -21,8 +21,8 @@ def main() -> None:
 
     t_start = time.time()
 
-    from benchmarks import (bench_baselines, bench_cache, bench_disagg,
-                            bench_energy_model, bench_features,
+    from benchmarks import (bench_baselines, bench_cache, bench_chaos,
+                            bench_disagg, bench_energy_model, bench_features,
                             bench_kernels, bench_lambda_sweep,
                             bench_model_addition, bench_overhead,
                             bench_pool_scale, bench_prefill,
@@ -79,6 +79,10 @@ def main() -> None:
             lambda: bench_energy_model.main(
                 n_queries=48 if args.fast else 120, smoke=args.fast,
                 artifact=None))
+    section("Chaos: reliability layer vs fault storm (goodput + breaker)",
+            lambda: bench_chaos.main(
+                per_task=20 if args.fast else 60, smoke=args.fast,
+                fleet=not args.fast, artifact=None))
     section("Kernels: allclose + ref timing", bench_kernels.main)
     section("Roofline table (from dry-run records)",
             lambda: roofline.table("experiments/dryrun"))

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -169,8 +169,21 @@ class GreenServRouter:
         # decisions match the cost-model-off path exactly
         self._pred_cost_mean = np.zeros(m, np.float64)
         self._pred_cost_seen = np.zeros(m, bool)
+        # failure-aware routing (docs/RELIABILITY.md): an optional health
+        # provider — () -> (n_models,) bool, True = routable — ANDed into
+        # the feasibility matrix each decision.  PoolServer wires this to
+        # its per-arm circuit breakers; None = every arm healthy.
+        self._arm_health: Optional[Callable[[], Optional[np.ndarray]]] = None
         # zero-calibration model addition: pool insert → fresh bandit arm
         pool.on_add(self._on_model_added)
+
+    def set_arm_health(self,
+                       provider: Optional[Callable[[], Optional[np.ndarray]]]
+                       ) -> None:
+        """Install (or clear, with None) the per-arm health provider.
+        The provider is polled once per ``route_batch`` call; a short or
+        None result means "no opinion" for the uncovered arms."""
+        self._arm_health = provider
 
     # -- pool growth ---------------------------------------------------------
 
@@ -222,7 +235,8 @@ class GreenServRouter:
                     energy_discounts_wh: Optional[np.ndarray] = None,
                     energy_costs_wh: Optional[np.ndarray] = None,
                     embeddings: Optional[np.ndarray] = None,
-                    task_labels: Optional[np.ndarray] = None
+                    task_labels: Optional[np.ndarray] = None,
+                    blocked: Optional[np.ndarray] = None
                     ) -> List[RouteDecision]:
         """Route an admitted batch in one shot (the serving hot path).
 
@@ -265,6 +279,15 @@ class GreenServRouter:
         probe) into ``ContextGenerator.batch`` — bitwise identical to
         recomputing, since embedder and classifier are deterministic.
 
+        ``blocked`` (Q, n_models) bool, optional: per-(query, arm) veto
+        ANDed (inverted) into feasibility — e.g. a retry must not land
+        back on the arm that just failed it.  Both the per-row veto and
+        the pool-wide arm-health provider (``set_arm_health``; the
+        scheduler's circuit breakers) enter through ``_feasible_matrix``,
+        so host and device scoring see identical masks.  Masking never
+        strands a query: a row left with no arm falls back to its
+        unmasked feasible row — serving degrades, it does not refuse.
+
         With ``RouterConfig.featurize`` resolving to "device" (and the
         deterministic LinUCB/Sherman–Morrison policy), featurize→score
         runs as one fused jitted pipeline (``_fused_decide``): the host
@@ -277,10 +300,10 @@ class GreenServRouter:
             return []
         if self._device_featurize_active():
             ctxs, arms, scores, feasible, t0 = self._featurize_score_device(
-                queries, embeddings, task_labels)
+                queries, embeddings, task_labels, blocked)
         else:
             ctxs, arms, scores, feasible, t0 = self._featurize_score_host(
-                queries, embeddings, task_labels)
+                queries, embeddings, task_labels, blocked)
         if energy_costs_wh is not None:
             c = np.asarray(energy_costs_wh, np.float64)
             if c.shape[0] != len(queries):
@@ -352,7 +375,8 @@ class GreenServRouter:
                 and self.config.algorithm == "linucb"
                 and self.config.solve_mode == "sherman_morrison")
 
-    def _feasible_matrix(self, queries: Sequence[Query]) -> np.ndarray:
+    def _feasible_matrix(self, queries: Sequence[Query],
+                         blocked: Optional[np.ndarray] = None) -> np.ndarray:
         masks = [self.pool.feasible_mask(q) for q in queries]
         # a concurrent pool.add() mid-batch yields ragged rows; pad earlier
         # rows with False (those queries were routed before the new model
@@ -361,11 +385,39 @@ class GreenServRouter:
         feasible = np.zeros((len(masks), width), dtype=bool)
         for i, m in enumerate(masks):
             feasible[i, : m.shape[0]] = m
+        # reliability masks ride the same matrix both scoring backends
+        # consume, so breaker state can never break host/device parity
+        masked = feasible
+        if self._arm_health is not None:
+            health = self._arm_health()
+            if health is not None:
+                health = np.asarray(health, bool)
+                w = min(health.shape[0], width)
+                masked = masked.copy()
+                masked[:, :w] &= health[:w]
+        if blocked is not None:
+            b = np.asarray(blocked, bool)
+            if b.shape[0] != len(masks):
+                raise ValueError(
+                    f"blocked rows {b.shape[0]} != batch {len(masks)}")
+            w = min(b.shape[1], width)
+            if masked is feasible:
+                masked = feasible.copy()
+            masked[:, :w] &= ~b[:, :w]
+        if masked is not feasible:
+            # serve-anyway guarantee: a query every arm of which is vetoed
+            # keeps its plain feasibility row (a fully-open pool must
+            # still answer; the breakers' probe trickle needs traffic)
+            dead = ~masked.any(axis=1)
+            if dead.any():
+                masked[dead] = feasible[dead]
+            feasible = masked
         return feasible
 
     def _featurize_score_host(self, queries: Sequence[Query],
                               embeddings: Optional[np.ndarray],
-                              task_labels: Optional[np.ndarray]
+                              task_labels: Optional[np.ndarray],
+                              blocked: Optional[np.ndarray] = None
                               ) -> Tuple[list, np.ndarray, np.ndarray,
                                          np.ndarray, float]:
         """Reference path: host featurization, then the batched selector."""
@@ -373,7 +425,7 @@ class GreenServRouter:
                                   embeddings=embeddings,
                                   task_labels=task_labels)
         t0 = time.perf_counter()
-        feasible = self._feasible_matrix(queries)
+        feasible = self._feasible_matrix(queries, blocked)
         x = np.stack([c.vector for c in ctxs])
         arms, scores = self.policy.select_batch(x, feasible)
         _sync(scores)                 # timing boundary (route_batch's clock)
@@ -381,7 +433,8 @@ class GreenServRouter:
 
     def _featurize_score_device(self, queries: Sequence[Query],
                                 embeddings: Optional[np.ndarray],
-                                task_labels: Optional[np.ndarray]
+                                task_labels: Optional[np.ndarray],
+                                blocked: Optional[np.ndarray] = None
                                 ) -> Tuple[list, np.ndarray, np.ndarray,
                                            np.ndarray, float]:
         """Fused path: one host hashing pass, then ``_fused_decide``."""
@@ -424,7 +477,7 @@ class GreenServRouter:
         ctx.record_device_batch(n, (time.perf_counter() - tc1) * 1e3,
                                 (tc1 - tc0) * 1e3)
         t0 = time.perf_counter()
-        feasible = self._feasible_matrix(queries)
+        feasible = self._feasible_matrix(queries, blocked)
         feas_pad = np.zeros((q_pad, self.config.max_arms), bool)
         feas_pad[:n, : feasible.shape[1]] = feasible
         if ctx.use_cluster:

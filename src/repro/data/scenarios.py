@@ -64,6 +64,9 @@ class Scenario:
     carbon_fn: Optional[Callable[[float], float]] = None
     # models held out of the *starting* pool (an "add" event brings them in)
     exclude: Optional[List[str]] = None
+    # chaos plan: engine name -> FaultSpec list (serving.faults), wrapped
+    # around the matching engine by the harness before the drive starts
+    faults: Optional[dict] = None
 
     @property
     def n_queries(self) -> int:
@@ -81,6 +84,10 @@ class Scenario:
             h.update(f"{q.uid}|{q.task}|{t:.9f}|{q.text}".encode())
         for e in self.events:
             h.update(f"{e.t_s:.9f}|{e.kind}|{e.model}".encode())
+        for name in sorted(self.faults or {}):
+            for f in self.faults[name]:
+                h.update(f"{name}|{f.kind}|{f.t_s:.9f}|{f.duration_s:.9f}"
+                         f"|{f.magnitude:.9f}".encode())
         return h.hexdigest()
 
 
@@ -207,5 +214,39 @@ def pool_churn(per_task: int = 60, seed: int = 0, rate_qps: float = 24.0,
                     events=events, exclude=[add_model])
 
 
+def chaos(per_task: int = 60, seed: int = 0, rate_qps: float = 12.0,
+          targets: tuple = ("qwen2.5-14b", "mistral-7b"),
+          background_models: tuple = ("llama-3.1-8b", "gemma-3-4b"),
+          background_rate: float = 0.5, frac_start: float = 0.35,
+          frac_end: float = 0.85, n_crashes: int = 4) -> Scenario:
+    """Chaos drill: steady Poisson traffic while a seeded fault storm
+    (``serving.faults.fault_storm``) batters the pool — each ``targets``
+    engine serves garbage (NaN-grade, zero-accuracy) output through the
+    same mid-run window and crashes twice inside it, while
+    ``background_models`` pick up Poisson-placed stalls and slow-step
+    episodes.  The default targets are the arms the converged bandit
+    leans on hardest (one big, one small), so the storm hits real
+    traffic — the regime where deadlines, retries, and per-arm circuit
+    breakers (not raw capacity) set the outcome: with the reliability
+    layer off, the router keeps feeding the poisoned arms until their
+    zero-accuracy completions wash back through the bandit."""
+    from repro.serving.faults import fault_storm  # avoid an import cycle
+    queries = make_stream(per_task=per_task, seed=seed)
+    arrivals = poisson_arrivals(len(queries), rate_qps, seed=seed + 1)
+    faults: dict = {}
+    for i, target in enumerate(targets):
+        storm = fault_storm(
+            span_s=arrivals[-1], target=target,
+            # background faults ride along with the first storm only
+            others=list(background_models) if i == 0 else [],
+            seed=seed + 2 + i, frac_start=frac_start, frac_end=frac_end,
+            n_crashes=n_crashes, background_rate=background_rate)
+        for name, specs in storm.items():
+            faults.setdefault(name, []).extend(specs)
+    return Scenario(name="chaos", queries=queries, arrivals_s=arrivals,
+                    faults=faults)
+
+
 __all__ = ["PoolEvent", "Scenario", "poisson_arrivals", "mmpp_arrivals",
-           "steady", "flash_crowd", "duplicate_flood", "pool_churn"]
+           "steady", "flash_crowd", "duplicate_flood", "pool_churn",
+           "chaos"]

@@ -102,6 +102,12 @@ class FleetController:
         self.responses: Dict[int, object] = {}
         self.dispatched: Dict[int, str] = {}     # uid -> shard name
         self.unanswered: set = set()
+        # terminal failures (reliability layer): uid -> TIMED_OUT/FAILED
+        # state string, harvested from each shard's ``server.failed``
+        # registry exactly like responses — a terminally-failed request
+        # is answered (negatively), never re-dispatched, and must not
+        # hold ``drive_fleet``'s drain condition open
+        self.failures: Dict[int, str] = {}
         # the controller's *belief* about routable shards: a killed shard
         # keeps receiving traffic until its heartbeat goes stale — the
         # controller has no oracle channel to the failure (queries
@@ -110,7 +116,8 @@ class FleetController:
         self._routable: set = {s.name for s in shards}
         self.events: List[dict] = []
         self.stats = {"dispatched": 0, "redispatched": 0, "completed": 0,
-                      "failovers": 0, "syncs": 0, "adopted_engines": 0}
+                      "failed": 0, "failovers": 0, "syncs": 0,
+                      "adopted_engines": 0}
         self._steps = 0
 
     # -- dispatch -------------------------------------------------------
@@ -176,6 +183,15 @@ class FleetController:
             self.unanswered.discard(uid)
             self.stats["completed"] += 1
             fresh.append(resp)
+        for uid, req in getattr(shard.server, "failed", {}).items():
+            if uid in shard.harvested:
+                continue
+            shard.harvested.add(uid)
+            if uid in self.responses or uid in self.failures:
+                continue
+            self.failures[uid] = req.state.value
+            self.unanswered.discard(uid)
+            self.stats["failed"] += 1
         return fresh
 
     # -- liveness / fail-over -------------------------------------------
@@ -206,7 +222,8 @@ class FleetController:
         self._harvest(dead)   # completions that landed before death
         lost = list(srv.arrivals)
         lost += [req.query for uid, req in srv.inflight.items()
-                 if req.hedge_of is None and uid not in self.responses]
+                 if req.hedge_of is None and uid not in self.responses
+                 and uid not in self.failures]
         adopted = 0
         if self.engine_factory is not None:
             for i, member in enumerate(srv.router.pool.names):
@@ -284,6 +301,7 @@ class FleetController:
     def sample(self, t_s: float) -> dict:
         return {"t_s": round(t_s, 4),
                 "completed": self.stats["completed"],
+                "failed": self.stats["failed"],
                 "inflight": sum(len(s.server.inflight)
                                 for s in self.live_shards()),
                 "parked": sum(len(s.server.arrivals)
@@ -381,9 +399,12 @@ def drive_fleet(controller: FleetController,
     traj: List[dict] = []
     while arr_i < len(queries) or controller.unanswered:
         if steps >= max_steps:
+            snaps = "\n".join(
+                f"[shard {s.name}] " + s.server.drain_snapshot()
+                for s in controller.live_shards())
             raise LivelockError(
                 f"fleet not drained after {max_steps} steps "
-                f"({len(controller.unanswered)} unanswered)")
+                f"({len(controller.unanswered)} unanswered)\n{snaps}")
         while ev_i < len(events) and events[ev_i][0] <= clk["t"]:
             events[ev_i][1]()
             ev_i += 1

@@ -1,9 +1,12 @@
 """Multi-model serving runtime: engines, continuous batching, routing."""
 from repro.serving.engine import (BaseEngine, EngineFailure, ModelEngine,
                                   SimEngine)
+from repro.serving.faults import FaultInjector, FaultSpec, fault_storm
+from repro.serving.reliability import BreakerConfig, CircuitBreaker
 from repro.serving.request import Request, RequestState, Response
 from repro.serving.scheduler import LivelockError, PoolServer
 
 __all__ = ["BaseEngine", "EngineFailure", "ModelEngine", "SimEngine",
            "Request", "RequestState", "Response", "PoolServer",
-           "LivelockError"]
+           "LivelockError", "BreakerConfig", "CircuitBreaker",
+           "FaultInjector", "FaultSpec", "fault_storm"]

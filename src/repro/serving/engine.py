@@ -328,7 +328,7 @@ class ModelEngine(BaseEngine):
         for i in range(self.max_batch):
             if self.slots[i] is None and self.queue:
                 req = self.queue.pop(0)
-                if req.state == RequestState.CANCELLED:
+                if req.defunct:
                     continue
                 req.slot = i
                 self.slots[i] = req
@@ -391,7 +391,7 @@ class ModelEngine(BaseEngine):
         if not any(self.slots):
             return []
         need_prefill = any(
-            req is not None and req.state != RequestState.CANCELLED
+            req is not None and not req.defunct
             and not req.prefill_done for req in self.slots)
         if self._jit_chunk_step is not None and need_prefill:
             return self._chunk_tick()
@@ -420,7 +420,7 @@ class ModelEngine(BaseEngine):
             ("prefill" if not req.prefill_done else "decode", 1,
              max(req.n_prompt_fed + len(req.generated), 1))
             for req in self.slots
-            if req is not None and req.state != RequestState.CANCELLED])
+            if req is not None and not req.defunct])
         fed_prompt = [0 if (req is None or req.prefill_done) else 1
                       for req in self.slots]
         return self._advance_slots(next_tok, fed_prompt)
@@ -436,7 +436,7 @@ class ModelEngine(BaseEngine):
         fed_prompt = [0] * self.max_batch
         meter = []
         for i, req in enumerate(self.slots):
-            if req is None or req.state == RequestState.CANCELLED:
+            if req is None or req.defunct:
                 continue
             kv_start = req.n_prompt_fed + len(req.generated)
             if not req.prefill_done:
@@ -474,7 +474,7 @@ class ModelEngine(BaseEngine):
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
-            if req.state == RequestState.CANCELLED:
+            if req.defunct:
                 self.slots[i] = None
                 continue
             if fed_prompt[i]:
@@ -675,8 +675,12 @@ class ModelEngine(BaseEngine):
         self.prefix_cache.insert(req.prompt_tokens, k, v)
 
     def restart(self) -> List[Request]:
-        inflight = ([r for r in self.slots if r is not None]
-                    + self.queue + self._migration_outbox)
+        # defunct (cancelled/timed-out/failed) requests are dropped, not
+        # resurrected: resetting one to QUEUED would re-enter a terminal
+        # uid into the scheduler's bookkeeping
+        inflight = [r for r in ([r for r in self.slots if r is not None]
+                                + self.queue + self._migration_outbox)
+                    if not r.defunct]
         for r in inflight:
             r.state = RequestState.QUEUED
             r.slot = -1
@@ -883,7 +887,7 @@ class SimEngine(BaseEngine):
             if active >= self.concurrency:
                 keep.extend(self.queue[pos:])
                 break
-            if req.state == RequestState.CANCELLED:
+            if req.defunct:
                 self._progress.pop(req.uid, None)
                 self._outcomes.pop(req.uid, None)
                 continue                       # drop; frees its slot
@@ -906,7 +910,9 @@ class SimEngine(BaseEngine):
         return out
 
     def restart(self) -> List[Request]:
-        inflight = list(self.queue)
+        # like ModelEngine.restart: defunct requests are dropped, never
+        # resurrected into the scheduler's bookkeeping
+        inflight = [r for r in self.queue if not r.defunct]
         for r in inflight:
             r.state = RequestState.QUEUED
             r.start_s = 0.0

@@ -15,8 +15,9 @@ class RequestState(enum.Enum):
     MIGRATING = "migrating"  # prompt KV in transit prefill→decode engine
     DECODE = "decode"        # generating
     DONE = "done"
-    FAILED = "failed"
+    FAILED = "failed"        # attempts exhausted (terminal, no response)
     CANCELLED = "cancelled"  # hedged duplicate that lost the race
+    TIMED_OUT = "timed_out"  # deadline passed before completion (terminal)
 
 
 @dataclasses.dataclass
@@ -62,6 +63,12 @@ class Request:
     finish_s: float = 0.0
     hedged: bool = False
     hedge_of: Optional[int] = None   # uid of the primary request
+    # --- reliability (docs/RELIABILITY.md) ---
+    # end-to-end deadline in seconds from ``submit_s`` (0.0 = none); the
+    # deadline covers *all* attempts — retries never reset the clock
+    deadline_s: float = 0.0
+    attempts: int = 0        # failed attempts so far (0 = first try clean)
+    max_retries: int = 0     # re-dispatches allowed after the first attempt
 
     @property
     def uid(self) -> int:
@@ -74,7 +81,16 @@ class Request:
     @property
     def done(self) -> bool:
         return self.state in (RequestState.DONE, RequestState.FAILED,
-                              RequestState.CANCELLED)
+                              RequestState.CANCELLED, RequestState.TIMED_OUT)
+
+    @property
+    def defunct(self) -> bool:
+        """Terminal without a completion — engines must drop the request
+        on sight (free its slot, never decode it, never resurrect it on
+        restart).  DONE is deliberately excluded: a finished request has a
+        Response and exits through the normal completion path."""
+        return self.state in (RequestState.CANCELLED, RequestState.FAILED,
+                              RequestState.TIMED_OUT)
 
     @property
     def latency_ms(self) -> float:

@@ -38,6 +38,7 @@ from repro.core.pool import ModelPool
 from repro.core.router import GreenServRouter
 from repro.core.types import Feedback, ModelProfile, Query, RouterConfig
 from repro.serving.engine import BaseEngine, EngineFailure
+from repro.serving.reliability import BreakerConfig, CircuitBreaker
 from repro.serving.request import Request, RequestState, Response
 
 
@@ -71,7 +72,11 @@ class PoolServer:
                  decode_engines: Optional[Dict[str, BaseEngine]] = None,
                  cost_model: Optional["EnergyCostModel"] = None,
                  admission_planner: bool = False,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 deadline_s: Optional[float] = None,
+                 max_retries: int = 0,
+                 retry_backoff_steps: int = 2,
+                 breaker_config: Optional[BreakerConfig] = None):
         names = router.pool.names
         missing = [n for n in names if n not in engines]
         if missing:
@@ -102,6 +107,26 @@ class PoolServer:
         # charge, and (when enabled) the energy-aware admission planner
         self.cost_model = cost_model
         self.admission_planner = bool(admission_planner)
+        # reliability layer (docs/RELIABILITY.md): per-request end-to-end
+        # deadline (None = no deadlines), retry budget per request, retry
+        # backoff in *scheduler steps* (virtual-clock aware — the benches
+        # advance modeled time, not wall time), and per-(engine, role)
+        # circuit breakers (None = breakers off).  All defaults preserve
+        # the reliability-off behaviour exactly.
+        self.deadline_s = deadline_s
+        self.max_retries = int(max_retries)
+        self.retry_backoff_steps = max(int(retry_backoff_steps), 1)
+        self.breaker_config = breaker_config
+        self.breakers: Dict[str, CircuitBreaker] = {}
+        self._step_idx = 0
+        # retries parked for backoff: (due_step, request, failed engine).
+        # Parked requests stay in ``inflight`` so drain conditions and
+        # fleet fail-over account for them.
+        self._retry_parked: List[tuple] = []
+        self._parked_uids: set = set()
+        # terminal registry: TIMED_OUT / FAILED requests (no Response
+        # exists; ``responses`` ∪ ``failed`` covers every admitted uid)
+        self.failed: Dict[int, Request] = {}
         for name, eng in engines.items():
             self._configure_engine(name, eng, initial=True)
         if telemetry is not None and telemetry.governor is not None:
@@ -114,12 +139,22 @@ class PoolServer:
         # here until a step() tick has free prefill capacity for them
         self.arrivals: List[Query] = []
         self.stats = {"hedges": 0, "restarts": 0, "completed": 0,
-                      "cache_hits": 0, "migrations": 0, "deferred": 0}
+                      "cache_hits": 0, "migrations": 0, "deferred": 0,
+                      "retries": 0, "timeouts": 0, "failed": 0,
+                      "slo_violations": 0, "breaker_opens": 0}
+        # cumulative routing decisions landed per engine (primaries,
+        # hedges, retries, restart replays) — the trajectory signal the
+        # chaos bench reads to show breakers shifting share off a bad arm
+        self.dispatch_counts: Dict[str, int] = {}
         # feedback for completions collected during the current step(); the
         # router is updated once per step via feedback_batch
         self._fb_buffer: List[Feedback] = []
         for name, twin in (decode_engines or {}).items():
             self.attach_decode_engine(name, twin)
+        if self.breaker_config is not None:
+            # OPEN arms vanish from route_batch's argmax on both scoring
+            # backends (the mask rides the feasibility matrix)
+            self.router.set_arm_health(self._arm_health_mask)
 
     # -- pool growth (paper §6.3.4) ---------------------------------------------
 
@@ -149,6 +184,39 @@ class PoolServer:
             self.cost_model.register_engine(name.split("#", 1)[0], engine)
         if self.telemetry is not None:
             self.telemetry.on_engine_added(name, engine, initial=initial)
+        if self.breaker_config is not None and name not in self.breakers:
+            # one breaker per (engine, role): primaries under their model
+            # name, decode twins under ``<name>#decode``.  Only primary
+            # breakers enter the routing mask (twins receive work through
+            # migration, not routing); twin breakers still gate hedging
+            # and feed the transition telemetry.
+            self.breakers[name] = CircuitBreaker(
+                self.breaker_config,
+                on_transition=self._breaker_transition_hook(name))
+
+    def _breaker_transition_hook(self, name: str) -> Callable:
+        def hook(old: str, new: str, step: int) -> None:
+            if new == "open":
+                self.stats["breaker_opens"] += 1
+            if self.telemetry is not None:
+                self.telemetry.on_breaker(name, old, new, step)
+        return hook
+
+    def _arm_health_mask(self) -> Optional[np.ndarray]:
+        """(n_models,) bool for the router: False = breaker holds the arm
+        (OPEN, or HALF_OPEN at its probe quota).  Polled once per
+        ``route_batch``; ``routable`` also advances OPEN→HALF_OPEN."""
+        names = self.router.pool.names
+        out = np.ones(len(names), bool)
+        for j, n in enumerate(names):
+            br = self.breakers.get(n)
+            if br is None:
+                continue
+            eng = self.engines.get(n)
+            out[j] = br.routable(self._step_idx,
+                                 pending=(eng.pending if eng is not None
+                                          else 0))
+        return out
 
     def add_engine(self, profile: ModelProfile, engine: BaseEngine,
                    decode_engine: Optional[BaseEngine] = None) -> None:
@@ -346,7 +414,9 @@ class PoolServer:
             req = Request(query=query, prompt_tokens=tokens[i],
                           max_new_tokens=query.max_new_tokens,
                           cache_features=miss_features[i],
-                          submit_s=self.clock())
+                          submit_s=self.clock(),
+                          deadline_s=(self.deadline_s or 0.0),
+                          max_retries=self.max_retries)
             per_engine.setdefault(decision.model_name, []).append(req)
             self.inflight[query.uid] = req
             self.wait_steps[query.uid] = 0
@@ -370,6 +440,8 @@ class PoolServer:
                 predicted.append((query.uid, wh))
         for name, batch in per_engine.items():
             self.engines[name].submit_many(batch)
+            self.dispatch_counts[name] = (
+                self.dispatch_counts.get(name, 0) + len(batch))
         if self.telemetry is not None:
             # with the cost model on, the per-uid predictions are already
             # net of prefix reuse — also crediting expected_savings_wh
@@ -459,17 +531,34 @@ class PoolServer:
 
     # -- hedged (straggler-mitigating) dispatch ------------------------------------
 
+    def _engine_healthy(self, name: str, eng: BaseEngine) -> bool:
+        """Hedge-target health gate: a failed/stalled-heartbeat engine or
+        a breaker-held arm must never receive a hedge — duplicating onto
+        a sick engine doubles the work and saves nothing."""
+        if getattr(eng, "_failed", False):
+            return False
+        if self.clock() - eng.heartbeat() > self.heartbeat_timeout_s:
+            return False
+        br = self.breakers.get(name)
+        if br is not None and not br.routable(self._step_idx,
+                                              pending=eng.pending):
+            return False
+        return True
+
     def _maybe_hedge(self) -> None:
         if self.hedge_after_steps is None:
             return
         for uid, req in list(self.inflight.items()):
             if req.done or uid in self.hedges or req.hedge_of is not None:
                 continue
+            if uid in self._parked_uids:
+                continue        # backing off for a retry, not straggling
             if (req.state == RequestState.QUEUED
                     and self.wait_steps[uid] >= self.hedge_after_steps):
-                # pick the least-loaded other engine as the hedge target
+                # pick the least-loaded *healthy* other engine as target
                 others = [(e.pending, n) for n, e in self.engines.items()
-                          if n != req.model_name]
+                          if n != req.model_name
+                          and self._engine_healthy(n, e)]
                 if not others:
                     continue
                 _, target = min(others)
@@ -477,8 +566,11 @@ class PoolServer:
                                 prompt_tokens=list(req.prompt_tokens),
                                 max_new_tokens=req.max_new_tokens,
                                 hedged=True, hedge_of=uid,
-                                submit_s=self.clock())
+                                submit_s=self.clock(),
+                                deadline_s=req.deadline_s)
                 self.engines[target].submit(hedge)
+                self.dispatch_counts[target] = (
+                    self.dispatch_counts.get(target, 0) + 1)
                 self.hedges[uid] = hedge
                 self.stats["hedges"] += 1
                 if self.telemetry is not None:
@@ -520,20 +612,249 @@ class PoolServer:
         # request to QUEUED — including a hedge loser whose query was
         # already answered; resurrecting it would re-insert a finished uid
         # into inflight (never drains) and duplicate the work.
+        display = f"{name}#decode" if decode else name
         primaries = [req for req in inflight
                      if req.hedge_of is None
-                     and req.uid not in self.responses]
-        if not primaries:
+                     and req.uid not in self.responses
+                     and req.uid not in self.failed]
+        # retry-eligible requests go through the reliability path: the
+        # failure is recorded (breaker + zero-accuracy bandit observation)
+        # and the request backs off before re-routing *away* from this
+        # arm.  Requests without a retry budget keep the legacy immediate
+        # re-route (no failure feedback — their pending decision must
+        # survive for the eventual completion).
+        retriable = [r for r in primaries if r.max_retries > 0]
+        replay = [r for r in primaries if r.max_retries == 0]
+        if not retriable:
+            br = self.breakers.get(display)
+            if br is not None:
+                # no per-request evidence will be recorded, but the
+                # restart itself is evidence against the arm
+                br.record_failure(self._step_idx)
+        for req in retriable:
+            self._schedule_retry_or_fail(req, display, "engine_restart")
+        if not replay:
             return
-        decisions = self.router.route_batch([req.query for req in primaries])
-        for req, decision in zip(primaries, decisions):
+        decisions = self.router.route_batch([req.query for req in replay])
+        for req, decision in zip(replay, decisions):
             self.inflight[req.uid] = req
             self.engines[decision.model_name].submit(req)
+            self.dispatch_counts[decision.model_name] = (
+                self.dispatch_counts.get(decision.model_name, 0) + 1)
 
     def _flush_feedback(self) -> None:
         if self._fb_buffer:
             fbs, self._fb_buffer = self._fb_buffer, []
             self.router.feedback_batch(fbs, strict=False)
+
+    # -- deadlines + retries (docs/RELIABILITY.md) ---------------------------------
+
+    def _attempt_failed(self, req: Request, engine_name: str, reason: str,
+                        energy_wh: float = 0.0) -> None:
+        """One dispatch of ``req`` died on ``engine_name``: record it with
+        the arm's breaker, feed the bandit the failure as a *real*
+        observation (the energy actually burned, zero accuracy — LinUCB
+        learns to avoid a degrading engine before the breaker trips), and
+        let telemetry charge the wasted energy to the governor.  The
+        bandit feedback consumes the attempt's pending routing decision
+        (flushed strict=False, so a mismatch is skipped, never fatal)."""
+        br = self.breakers.get(engine_name)
+        if br is not None:
+            br.record_failure(self._step_idx)
+        if req.hedge_of is None:
+            # a decode twin's display name maps to the primary's arm
+            arm = engine_name.split("#", 1)[0]
+            try:
+                model_index = self.router.pool.index_of(arm)
+            except KeyError:
+                model_index = None
+            if model_index is not None:
+                self._fb_buffer.append(Feedback(
+                    query_uid=req.uid, model_index=model_index,
+                    accuracy=0.0, energy_wh=energy_wh, latency_ms=0.0,
+                    input_tokens=len(req.prompt_tokens), output_tokens=0))
+        if self.telemetry is not None:
+            self.telemetry.on_attempt_failure(req.uid, engine_name, reason,
+                                              energy_wh)
+
+    def _reset_for_retry(self, req: Request) -> None:
+        """Back to a clean QUEUED request (the same reset ``restart``
+        applies): no slot, no generated tokens, no prompt cursor, no KV in
+        transit.  ``submit_s`` is deliberately untouched — the deadline
+        spans all attempts."""
+        req.state = RequestState.QUEUED
+        req.slot = -1
+        req.generated = []
+        req.n_prompt_fed = 0
+        req.prefix_reused = 0
+        req.first_token_s = 0.0
+        req.start_s = 0.0
+        req.kv_payload = None
+        req.kv_migrated = 0
+        req.prefill_wh = 0.0
+
+    def _schedule_retry_or_fail(self, req: Request, engine_name: str,
+                                reason: str, energy_wh: float = 0.0) -> None:
+        """An attempt died: record the failure, then either park the
+        request for an exponential-backoff retry (steps, virtual-clock
+        aware) or — budget exhausted — declare it terminally FAILED."""
+        self._attempt_failed(req, engine_name, reason, energy_wh)
+        req.attempts += 1
+        if req.attempts <= req.max_retries:
+            self._reset_for_retry(req)
+            due = self._step_idx + (self.retry_backoff_steps
+                                    * (2 ** (req.attempts - 1)))
+            self._retry_parked.append((due, req, engine_name))
+            self._parked_uids.add(req.uid)
+            self.inflight[req.uid] = req     # fail-over must still see it
+            self.wait_steps[req.uid] = 0
+            self.stats["retries"] += 1
+        else:
+            self._terminal_failure(req, RequestState.FAILED, reason)
+
+    def _admit_retries(self) -> None:
+        """Re-dispatch parked retries whose backoff elapsed: flush the
+        buffered failure feedback first (the re-route must not overwrite
+        a pending decision the flush consumes), then route the batch with
+        each request's failed arm vetoed (``blocked``) and re-predict its
+        in-flight charge — the governor *replaces* the prior charge for
+        the uid, never stacks it."""
+        if not self._retry_parked:
+            return
+        due = [e for e in self._retry_parked if e[0] <= self._step_idx]
+        if not due:
+            return
+        self._retry_parked = [e for e in self._retry_parked
+                              if e[0] > self._step_idx]
+        for _, req, _ in due:
+            self._parked_uids.discard(req.uid)
+        self._flush_feedback()
+        live = [(req, failed_arm) for _, req, failed_arm in due
+                if not req.defunct and req.uid in self.inflight
+                and req.uid not in self.responses]
+        if not live:
+            return
+        names = self.router.pool.names
+        blocked = np.zeros((len(live), len(names)), bool)
+        for i, (req, failed_arm) in enumerate(live):
+            arm = failed_arm.split("#", 1)[0]
+            if arm in names:
+                blocked[i, names.index(arm)] = True
+        costs = occ = None
+        if self.cost_model is not None:
+            occ = {n: self._engine_occupancy(n) for n in names}
+            costs = self.cost_model.predict_matrix(
+                names, [len(req.prompt_tokens) for req, _ in live],
+                [req.max_new_tokens for req, _ in live], occupancy=occ)
+        decisions = self.router.route_batch(
+            [req.query for req, _ in live], energy_costs_wh=costs,
+            blocked=blocked)
+        predicted = [] if costs is not None else None
+        for i, ((req, failed_arm), decision) in enumerate(zip(live,
+                                                              decisions)):
+            self.wait_steps[req.uid] = 0
+            if costs is not None:
+                wh = float(costs[i, decision.model_index])
+                req.predicted_wh = wh
+                self.cost_model.note_admission(
+                    req.uid, decision.model_name, wh,
+                    n_prompt=len(req.prompt_tokens),
+                    max_new_tokens=req.max_new_tokens,
+                    occupancy=occ.get(decision.model_name, 0.0))
+                predicted.append((req.uid, wh))
+            self.engines[decision.model_name].submit(req)
+            self.dispatch_counts[decision.model_name] = (
+                self.dispatch_counts.get(decision.model_name, 0) + 1)
+            if self.telemetry is not None:
+                self.telemetry.on_retry(req.uid, req.attempts, failed_arm,
+                                        decision.model_name)
+        if self.telemetry is not None and predicted:
+            # n=0: these uids were already counted at first admission —
+            # this call only swaps their governor in-flight charges
+            self.telemetry.on_admit(
+                0, sum(e.pending for e in self.engines.values()),
+                predicted=predicted)
+
+    def _check_deadlines(self) -> None:
+        """Expire requests whose end-to-end deadline passed: cancel any
+        hedge, count the SLO violation, record the attempt failure on the
+        arm that was holding it, and terminalize as TIMED_OUT.  Engines
+        holding the request drop it on sight (``Request.defunct``)."""
+        now = self.clock()
+        for uid, req in list(self.inflight.items()):
+            if req.deadline_s <= 0.0 or req.done:
+                continue
+            waited = now - req.submit_s
+            if waited <= req.deadline_s:
+                continue
+            if uid in self._parked_uids:
+                self._retry_parked = [e for e in self._retry_parked
+                                      if e[1].uid != uid]
+                self._parked_uids.discard(uid)
+            hedge = self.hedges.get(uid)
+            if hedge is not None:
+                hedge.state = RequestState.CANCELLED
+            if req.model_name:
+                self._attempt_failed(req, req.model_name, "timeout", 0.0)
+            self._terminal_failure(req, RequestState.TIMED_OUT, "timeout",
+                                   waited_s=waited)
+
+    def _terminal_failure(self, req: Request, state: RequestState,
+                          reason: str, waited_s: float = 0.0) -> None:
+        """The request is over without a Response: move it to the
+        ``failed`` terminal registry, release its governor in-flight
+        charge exactly once (``on_cancelled`` pops the uid; a second call
+        is a no-op), and drop its cost-model pending prediction."""
+        uid = req.uid
+        req.state = state
+        req.finish_s = self.clock()
+        self.failed[uid] = req
+        self.inflight.pop(uid, None)
+        self.hedges.pop(uid, None)
+        self.wait_steps.pop(uid, None)
+        if state is RequestState.TIMED_OUT:
+            self.stats["timeouts"] += 1
+            self.stats["slo_violations"] += 1
+            if self.telemetry is not None:
+                self.telemetry.on_timeout(uid, waited_s)
+        else:
+            self.stats["failed"] += 1
+            if self.telemetry is not None:
+                self.telemetry.on_request_failed(uid, reason)
+        if self.telemetry is not None:
+            self.telemetry.on_cancelled(uid)
+        if self.cost_model is not None:
+            self.cost_model.forget_query(uid)
+
+    def _handle_corrupt(self, resp: Response, req: Request,
+                        engine_name: str) -> bool:
+        """A completion came back marked ``corrupt`` (the NaN/inf-logits
+        failure mode — energy burned, output garbage).  Returns True when
+        the response was intercepted (retry scheduled / hedge dropped);
+        False lets it complete as a zero-accuracy answer (the reliability-
+        off baseline, and the retry-budget-exhausted fallthrough is
+        handled inside ``_schedule_retry_or_fail``)."""
+        if req.hedge_of is not None:
+            # a corrupt hedge must never win the race: drop the duplicate,
+            # the primary keeps running
+            if self.hedges.get(req.hedge_of) is req:
+                del self.hedges[req.hedge_of]
+            req.state = RequestState.CANCELLED
+            br = self.breakers.get(engine_name)
+            if br is not None:
+                br.record_failure(self._step_idx)
+            if self.telemetry is not None:
+                self.telemetry.on_attempt_failure(req.uid, engine_name,
+                                                  "garbage", resp.energy_wh)
+            return True
+        if req.max_retries > 0:
+            self._schedule_retry_or_fail(req, engine_name, "garbage",
+                                         resp.energy_wh)
+            return True
+        br = self.breakers.get(engine_name)
+        if br is not None:
+            br.record_failure(self._step_idx)
+        return False
 
     # -- completion -------------------------------------------------------------------
 
@@ -542,6 +863,17 @@ class PoolServer:
         primary = self.inflight.get(primary_uid)
         if primary is None or primary_uid in self.responses:
             return                          # race already resolved
+        br = self.breakers.get(resp.model_name)
+        if br is not None:
+            br.record_success(self._step_idx)
+        if (primary.deadline_s > 0.0
+                and self.clock() - primary.submit_s > primary.deadline_s):
+            # answered, but late: served out of SLO (deadline enforcement
+            # runs before engine steps, so a same-tick finish still wins)
+            self.stats["slo_violations"] += 1
+            if self.telemetry is not None:
+                self.telemetry.on_slo_violation(primary_uid,
+                                                resp.latency_ms)
         # cancel the loser of a hedged pair
         if req.hedge_of is not None:        # hedge won
             primary.state = RequestState.CANCELLED
@@ -609,25 +941,37 @@ class PoolServer:
         telemetry/governor step.  Returns the responses completed this
         tick."""
         done: List[Response] = []
+        self._step_idx += 1
         self._check_engines()
+        self._check_deadlines()
+        self._admit_retries()
         self._maybe_hedge()
         self._admit_arrivals()
         for name, eng in self.engines.items():
             try:
                 for resp in eng.step():
                     req = self._find_request(resp.uid, name)
-                    if req is not None:
-                        self._complete(resp, req)
-                        done.append(resp)
+                    if req is None:
+                        continue
+                    if (getattr(resp, "corrupt", False)
+                            and self._handle_corrupt(resp, req, name)):
+                        continue
+                    self._complete(resp, req)
+                    done.append(resp)
             except EngineFailure:
                 self._restart_engine(name)
         for name, twin in self.decode_engines.items():
             try:
                 for resp in twin.step():
                     req = self._find_request(resp.uid, name)
-                    if req is not None:
-                        self._complete(resp, req)
-                        done.append(resp)
+                    if req is None:
+                        continue
+                    if (getattr(resp, "corrupt", False)
+                            and self._handle_corrupt(resp, req,
+                                                     f"{name}#decode")):
+                        continue
+                    self._complete(resp, req)
+                    done.append(resp)
             except EngineFailure:
                 self._restart_engine(name, decode=True)
         self._pump_migrations()
@@ -663,7 +1007,7 @@ class PoolServer:
                 continue
             twin = self.decode_engines.get(name)
             for req in eng.drain_migrations():
-                if req.state == RequestState.CANCELLED:
+                if req.defunct:
                     continue
                 if twin is None:
                     req.kv_payload = None
@@ -689,11 +1033,38 @@ class PoolServer:
                 return hedge
         return req
 
+    def drain_snapshot(self) -> str:
+        """Multi-line diagnostic of everything that could hold a drain
+        open: arrivals, retry parking, per-engine occupancy/health, and
+        the in-flight uids with their states.  Embedded in LivelockError
+        so a stuck drain is diagnosable from the exception alone."""
+        lines = [f"arrivals queued: {len(self.arrivals)}; "
+                 f"retry-parked: {len(self._retry_parked)} "
+                 f"(next due step {min((e[0] for e in self._retry_parked), default='-')}; "
+                 f"now step {self._step_idx})"]
+        for name, eng in self._all_engines().items():
+            br = self.breakers.get(name)
+            lines.append(
+                f"  engine {name}: pending={eng.pending} "
+                f"free={eng.free_capacity} "
+                f"role={getattr(eng, 'role', 'unified')} "
+                f"failed={bool(getattr(eng, '_failed', False))}"
+                + (f" breaker={br.state}" if br is not None else ""))
+        if self.inflight:
+            shown = list(self.inflight.items())[:16]
+            more = len(self.inflight) - len(shown)
+            lines.append("  inflight: " + ", ".join(
+                f"{uid}:{req.state.value}@{req.model_name or '?'}"
+                for uid, req in shown) + (f" …+{more} more" if more else ""))
+        return "\n".join(lines)
+
     def run_until_drained(self, max_steps: int = 100_000) -> None:
         """Step until nothing is in flight *and* no arrival is parked.
         Raises ``LivelockError`` (a ``TimeoutError``) if the step budget
         runs out with live work — a silent return here would mask a
-        scheduler livelock, which the continuous loop must never hide."""
+        scheduler livelock, which the continuous loop must never hide.
+        The error message carries a full ``drain_snapshot`` (queue depth,
+        per-engine occupancy/state, in-flight uids)."""
         for _ in range(max_steps):
             if not self.inflight and not self.arrivals:
                 return
@@ -703,4 +1074,4 @@ class PoolServer:
         raise LivelockError(
             f"{len(self.inflight)} request(s) still in flight and "
             f"{len(self.arrivals)} arrival(s) still parked after "
-            f"{max_steps} steps")
+            f"{max_steps} steps\n" + self.drain_snapshot())

@@ -22,6 +22,10 @@ ENGINE_ADDED = "engine_added"   # pool grew at runtime (add_engine)
 MIGRATE = "migrate"         # prompt KV handed prefill→decode engine
 DEFER = "defer"             # admission planner parked arrivals (no budget
                             # headroom for their predicted Wh this tick)
+ATTEMPT_FAIL = "attempt_fail"   # one dispatch died (crash/garbage/stall)
+RETRY = "retry"             # failed request re-routed away from its arm
+TIMEOUT = "timeout"         # deadline passed; request terminal TIMED_OUT
+BREAKER = "breaker"         # circuit breaker state transition on an arm
 
 
 class Event(NamedTuple):

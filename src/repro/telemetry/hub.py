@@ -73,6 +73,23 @@ class Telemetry:
         self._pred_err = r.histogram(
             "greenserv_energy_prediction_error_ratio",
             help="abs(metered-predicted)/metered Wh per completion")
+        # reliability layer (docs/RELIABILITY.md): pre-bound so the
+        # counters export at zero on healthy runs
+        self._retries = r.counter(
+            "greenserv_retries_total",
+            help="failed/expired dispatches re-routed to another arm")
+        self._timeouts = r.counter(
+            "greenserv_timeouts_total",
+            help="requests terminal TIMED_OUT (deadline passed)")
+        self._req_failed = r.counter(
+            "greenserv_failed_total",
+            help="requests terminal FAILED (attempts exhausted)")
+        self._slo_violations = r.counter(
+            "greenserv_slo_violations_total",
+            help="deadline misses (timeouts + late completions)")
+        self._breaker_transitions = r.counter(
+            "greenserv_breaker_transitions_total",
+            help="circuit-breaker state changes across all arms")
         # per-model/per-engine handles, bound lazily on first use
         self._completed: Dict[str, Counter] = {}
         self._energy_per_tok: Dict[str, Histogram] = {}
@@ -112,6 +129,9 @@ class Telemetry:
         # disaggregated serving: KV migrations (per prefill engine) and
         # per-engine cumulative joules for the role-attribution diff
         self._migrations: Dict[str, Counter] = {}
+        # per-engine reliability handles (lazy, like restarts)
+        self._attempt_failures: Dict[str, Counter] = {}
+        self._breaker_open: Dict[str, object] = {}
         self._role_energy = {
             role: r.counter("greenserv_energy_joules_total", {"role": role},
                             help="pool-wide metered joules by engine role")
@@ -252,6 +272,61 @@ class Telemetry:
         c.inc()
         self.events.emit(ev.RESTART, self.clock(), engine=engine,
                          n_requeued=n_requeued)
+
+    # -- reliability hooks (docs/RELIABILITY.md) ----------------------------
+
+    def on_attempt_failure(self, uid: int, engine: str, reason: str,
+                           energy_wh: float = 0.0) -> None:
+        """One dispatch of a request died on ``engine`` (crash, garbage
+        output, timeout…).  Any ``energy_wh`` it burned produced no
+        completion, so the governor charges it as extra energy — exactly
+        like a hedge loser's duplicate work."""
+        c = self._attempt_failures.get(engine)
+        if c is None:
+            c = self._attempt_failures[engine] = self.registry.counter(
+                "greenserv_attempt_failures_total", {"engine": engine})
+        c.inc()
+        self.events.emit(ev.ATTEMPT_FAIL, self.clock(), uid=uid,
+                         engine=engine, reason=reason, energy_wh=energy_wh)
+        if self.governor is not None and energy_wh > 0.0:
+            self.governor.on_extra_energy(energy_wh, self.clock())
+
+    def on_retry(self, uid: int, attempt: int, from_engine: str,
+                 to_engine: str) -> None:
+        self._retries.inc()
+        self.events.emit(ev.RETRY, self.clock(), uid=uid, attempt=attempt,
+                         from_engine=from_engine, to_engine=to_engine)
+
+    def on_timeout(self, uid: int, waited_s: float) -> None:
+        """Deadline passed before any completion: terminal TIMED_OUT.
+        Every timeout is an SLO violation by definition.  The governor's
+        in-flight charge is released by the scheduler's ``on_cancelled``
+        call (its exactly-once bookkeeping), not here."""
+        self._timeouts.inc()
+        self._slo_violations.inc()
+        self.events.emit(ev.TIMEOUT, self.clock(), uid=uid,
+                         waited_s=waited_s)
+
+    def on_request_failed(self, uid: int, reason: str) -> None:
+        """Attempts exhausted: terminal FAILED (no response exists)."""
+        self._req_failed.inc()
+
+    def on_slo_violation(self, uid: int, latency_ms: float) -> None:
+        """A completion arrived, but after its deadline (late answer —
+        served, yet out of SLO).  Timeouts count through ``on_timeout``."""
+        self._slo_violations.inc()
+
+    def on_breaker(self, engine: str, old: str, new: str,
+                   step: int) -> None:
+        """A circuit breaker changed state on ``engine``'s arm."""
+        self._breaker_transitions.inc()
+        g = self._breaker_open.get(engine)
+        if g is None:
+            g = self._breaker_open[engine] = self.registry.gauge(
+                "greenserv_breaker_open", {"engine": engine})
+        g.set(0.0 if new == "closed" else 1.0)
+        self.events.emit(ev.BREAKER, self.clock(), engine=engine,
+                         old=old, new=new, step=step)
 
     def on_step(self, engines: Dict[str, object]) -> None:
         """Once per ``PoolServer.step``: power samples (per engine, pool,

@@ -38,6 +38,11 @@ def pytest_configure(config):
         "fleet: fleet subsystem tests — device-resident router state "
         "(zero-transfer routing), sharded pool all-reduce, heartbeat "
         "fail-over, fleet checkpointing (run the subset with -m fleet)")
+    config.addinivalue_line(
+        "markers",
+        "chaos: reliability-layer tests — deadlines/retries, per-arm "
+        "circuit breakers, fault injection, governor charge hygiene "
+        "under failure (run the subset with -m chaos)")
 
 
 @pytest.fixture(scope="session")

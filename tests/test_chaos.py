@@ -1,0 +1,492 @@
+"""Reliability layer (docs/RELIABILITY.md): deadlines + retries, per-arm
+circuit breakers, chaos fault injection, and governor charge hygiene
+under failure.
+
+The invariants under test:
+
+  * breaker state machine — CLOSED opens at the rolling failure-rate
+    threshold, cools down to HALF_OPEN in scheduler steps, admits a
+    bounded probe trickle, and closes (or re-opens) on probe outcome;
+  * fault injection — schedules are validated, deterministic in their
+    seed, and each fault kind does what the taxonomy says (stalls freeze
+    output but keep modeled time moving, garbage corrupts completions
+    whose energy was really burned);
+  * deadlines / retries — an expired request terminalizes as TIMED_OUT
+    and its engine drops it on sight; a failed attempt backs off and
+    re-routes *away* from the failed arm; an exhausted retry budget
+    terminalizes as FAILED.  ``responses`` ∪ ``failed`` always covers
+    every admitted uid — nothing is ever lost;
+  * hedging — a hedge never targets a breaker-held or stale-heartbeat
+    engine (duplicating onto a sick engine doubles work, saves nothing);
+  * governor — a terminal failure releases the in-flight predicted
+    charge exactly once, even after a retry re-admission replaced it;
+  * telemetry — the reliability counters pre-bind (export at zero on
+    healthy runs) and count under chaos;
+  * disaggregated pools survive repeated prefill+twin kill cycles with
+    nothing lost and hedge bookkeeping cleared.
+
+Run the subset with ``-m chaos``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.pool import ModelPool
+from repro.core.router import GreenServRouter
+from repro.core.types import ModelProfile, Query, RouterConfig
+from repro.data import tokenizer as tok
+from repro.data.scenarios import chaos
+from repro.serving import (BreakerConfig, CircuitBreaker, FaultInjector,
+                           FaultSpec, LivelockError, ModelEngine, PoolServer,
+                           RequestState, SimEngine, fault_storm)
+from repro.serving.reliability import CLOSED, HALF_OPEN, OPEN
+from repro.telemetry import EnergyBudgetGovernor, Telemetry, to_prometheus
+
+pytestmark = pytest.mark.chaos
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker state machine
+# ---------------------------------------------------------------------------
+
+
+class TestCircuitBreaker:
+    def _cfg(self, **kw):
+        base = dict(window=4, failure_threshold=0.5, min_samples=2,
+                    open_steps=10, probe_quota=1, probe_successes=2)
+        base.update(kw)
+        return BreakerConfig(**base)
+
+    def test_opens_at_failure_threshold(self):
+        br = CircuitBreaker(self._cfg())
+        br.record_failure(1)
+        assert br.state == CLOSED          # min_samples not met yet
+        br.record_failure(2)
+        assert br.state == OPEN
+        assert br.n_opens == 1
+        assert not br.routable(3)
+
+    def test_successes_keep_it_closed(self):
+        br = CircuitBreaker(self._cfg())
+        for s in range(8):
+            br.record_success(s)
+        br.record_failure(9)               # 1 failure in a window of 4
+        assert br.state == CLOSED
+        assert br.routable(10)
+
+    def test_cooldown_probe_and_reclose(self):
+        br = CircuitBreaker(self._cfg())
+        br.record_failure(1), br.record_failure(2)
+        assert br.state == OPEN
+        assert not br.routable(5)          # cooling down
+        assert br.routable(12, pending=0)  # open_steps elapsed -> HALF_OPEN
+        assert br.state == HALF_OPEN
+        # probe trickle: quota=1 means a busy arm admits nothing more
+        assert not br.routable(12, pending=1)
+        br.record_success(13)
+        assert br.state == HALF_OPEN       # needs probe_successes=2
+        br.record_success(14)
+        assert br.state == CLOSED
+        assert br.failure_rate() == 0.0    # window cleared on close
+
+    def test_probe_failure_reopens_and_restarts_cooldown(self):
+        br = CircuitBreaker(self._cfg())
+        br.record_failure(1), br.record_failure(2)
+        assert br.routable(12)             # HALF_OPEN
+        br.record_failure(13)              # the probe died
+        assert br.state == OPEN
+        assert br.n_opens == 2
+        assert not br.routable(14)
+        assert br.routable(23)             # cooldown restarted from step 13
+
+    def test_transition_hook_fires_once_per_change(self):
+        seen = []
+        br = CircuitBreaker(self._cfg(),
+                            on_transition=lambda o, n, s: seen.append((o, n)))
+        br.record_failure(1), br.record_failure(2)
+        br.routable(12)
+        br.record_success(13), br.record_success(14)
+        assert seen == [(CLOSED, OPEN), (OPEN, HALF_OPEN),
+                        (HALF_OPEN, CLOSED)]
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            BreakerConfig(failure_threshold=0.0)
+        with pytest.raises(ValueError):
+            BreakerConfig(failure_threshold=1.5)
+        with pytest.raises(ValueError):
+            BreakerConfig(window=0)
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+
+def _profile(name="sim0", params_b=1.0):
+    return ModelProfile(name=name, family="s", params_b=params_b,
+                        ms_per_token=1.0, prefill_ms=10.0)
+
+
+def _outcome(query, model):
+    return 0.8, 0.01, 10.0, 4
+
+
+class TestFaultInjection:
+    def test_fault_spec_validation(self):
+        with pytest.raises(ValueError):
+            FaultSpec(t_s=0.0, kind="meteor")
+        spec = FaultSpec(t_s=1.0, kind="stall", duration_s=2.0)
+        assert spec.active(1.5) and not spec.active(3.5)
+
+    def test_fault_storm_deterministic_in_seed(self):
+        a = fault_storm(100.0, "m0", ["m1", "m2"], seed=3, n_crashes=4)
+        b = fault_storm(100.0, "m0", ["m1", "m2"], seed=3, n_crashes=4)
+        assert a == b
+        c = fault_storm(100.0, "m0", ["m1", "m2"], seed=4, n_crashes=4)
+        assert a != c
+        crashes = [f for f in a["m0"] if f.kind == "crash"]
+        assert len(crashes) == 4
+        assert all(35.0 <= f.t_s <= 65.0 for f in crashes)
+
+    def test_stall_freezes_output_but_not_modeled_time(self):
+        clk = {"t": 0.0}
+        eng = SimEngine(_profile(), _outcome, clock=lambda: clk["t"])
+        inj = FaultInjector(eng, [FaultSpec(t_s=0.0, kind="stall",
+                                            duration_s=5.0)],
+                            clock=lambda: clk["t"])
+        t0 = inj.modeled_time_s()
+        assert inj.step() == []
+        assert inj.stats["stall_steps"] == 1
+        assert inj.modeled_time_s() > t0   # the stalled tick still costs
+
+    def test_garbage_corrupts_completions_energy_still_burned(self):
+        from repro.serving import Request
+        clk = {"t": 0.0}
+        eng = SimEngine(_profile(), _outcome, clock=lambda: clk["t"])
+        inj = FaultInjector(eng, [FaultSpec(t_s=0.0, kind="garbage",
+                                            duration_s=1e9)],
+                            clock=lambda: clk["t"])
+        inj.submit(Request(query=Query(uid=0, text="q"),
+                           prompt_tokens=[1, 2], max_new_tokens=2))
+        out = []
+        for _ in range(10):
+            out += inj.step()
+            if out:
+                break
+        assert out and out[0].corrupt
+        assert out[0].tokens == [] and out[0].accuracy == 0.0
+        assert out[0].energy_wh > 0.0      # the joules really happened
+        assert inj.stats["garbage"] == 1
+        assert inj.cumulative_joules() > 0.0   # delegation to the inner
+
+    def test_chaos_scenario_fingerprint_covers_faults(self):
+        a = chaos(per_task=2, seed=0, targets=("qwen2.5-7b",))
+        b = chaos(per_task=2, seed=0, targets=("qwen2.5-7b",))
+        assert a.fingerprint() == b.fingerprint()
+        assert a.faults and "qwen2.5-7b" in a.faults
+        c = chaos(per_task=2, seed=0, targets=("qwen2.5-7b",), n_crashes=2)
+        assert a.fingerprint() != c.fingerprint()   # schedule is hashed
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: deadlines, retries, terminal failure
+# ---------------------------------------------------------------------------
+
+
+def _server(n=2, clk=None, telemetry=None, steps_per_query=1, **kw):
+    """A small sim pool on a shared virtual clock the test advances."""
+    clk = clk if clk is not None else {"t": 0.0}
+    clock = lambda: clk["t"]  # noqa: E731
+    profiles = [_profile(f"sim{i}", params_b=i + 1.0) for i in range(n)]
+    engines = {p.name: SimEngine(p, _outcome, clock=clock,
+                                 steps_per_query=steps_per_query)
+               for p in profiles}
+    router = GreenServRouter(RouterConfig(lam=0.4, max_arms=8),
+                             ModelPool(profiles))
+    server = PoolServer(router, engines, clock=clock, telemetry=telemetry,
+                        **kw)
+    return server, engines, clk
+
+
+def test_deadline_expires_to_timed_out_and_engine_drops_defunct():
+    clk = {"t": 0.0}
+    server, engines, _ = _server(
+        n=1, clk=clk, steps_per_query=10_000,   # will never finish in time
+        deadline_s=1.0, max_retries=0, telemetry=Telemetry(
+            clock=lambda: clk["t"]))
+    req = server.submit(Query(uid=0, text="slow one"))
+    assert req.deadline_s == 1.0
+    server.step()
+    assert not server.failed               # deadline not passed yet
+    clk["t"] = 2.0
+    server.step()
+    assert server.failed[0].state is RequestState.TIMED_OUT
+    assert 0 not in server.inflight
+    assert server.stats["timeouts"] == 1
+    assert server.stats["slo_violations"] == 1
+    # the engine still held the request; defunct work is dropped on sight
+    server.step()
+    assert engines["sim0"].pending == 0
+    # responses ∪ failed covers every admitted uid
+    assert set(server.responses) | set(server.failed) == {0}
+    text = to_prometheus(server.telemetry.registry)
+    assert "greenserv_timeouts_total 1" in text
+    assert "greenserv_slo_violations_total 1" in text
+
+
+def test_retry_reroutes_away_from_failed_arm():
+    server, engines, clk = _server(
+        n=2, steps_per_query=3, max_retries=2, retry_backoff_steps=1,
+        breaker_config=BreakerConfig(window=4, min_samples=1,
+                                     failure_threshold=0.5, open_steps=50))
+    tel = Telemetry(clock=lambda: clk["t"])
+    server.telemetry = tel
+    req = server.submit(Query(uid=0, text="route me"))
+    first_arm = req.model_name
+    engines[first_arm].inject_failure()
+    # crash -> restart -> failure recorded -> parked for backoff
+    server.step()
+    assert server.stats["restarts"] == 1
+    assert req.attempts == 1
+    assert 0 in server.inflight            # parked retries stay visible
+    for _ in range(30):
+        server.step()
+        clk["t"] += 0.1
+        if server.responses:
+            break
+    assert 0 in server.responses
+    assert req.model_name != first_arm     # blocked veto re-routed it
+    assert server.stats["retries"] == 1
+    assert server.breakers[first_arm].failure_rate() > 0.0
+    text = to_prometheus(tel.registry)
+    assert "greenserv_retries_total 1" in text
+    assert f'greenserv_attempt_failures_total{{engine="{first_arm}"}} 1' \
+        in text
+
+
+def test_corrupt_completion_retries_to_clean_answer():
+    server, engines, clk = _server(
+        n=2, steps_per_query=2, max_retries=2, retry_backoff_steps=1,
+        breaker_config=BreakerConfig(window=4, min_samples=1,
+                                     failure_threshold=0.5, open_steps=50))
+    req = server.submit(Query(uid=0, text="poisoned arm"))
+    bad = req.model_name
+    server.engines[bad] = FaultInjector(
+        engines[bad], [FaultSpec(t_s=0.0, kind="garbage", duration_s=1e9)],
+        clock=server.clock)
+    for _ in range(30):
+        server.step()
+        clk["t"] += 0.1
+        if server.responses:
+            break
+    resp = server.responses[0]
+    assert not getattr(resp, "corrupt", False)
+    assert resp.model_name != bad
+    assert server.stats["retries"] >= 1
+    # the poisoned arm's breaker saw the garbage as a failure
+    assert server.breakers[bad].failure_rate() > 0.0 \
+        or server.breakers[bad].state != CLOSED
+
+
+def test_reliability_off_completes_garbage_at_zero_accuracy():
+    server, engines, clk = _server(n=1, steps_per_query=2)   # legacy config
+    req = server.submit(Query(uid=0, text="no retries"))
+    server.engines[req.model_name] = FaultInjector(
+        engines[req.model_name],
+        [FaultSpec(t_s=0.0, kind="garbage", duration_s=1e9)],
+        clock=server.clock)
+    for _ in range(10):
+        server.step()
+        clk["t"] += 0.1
+        if server.responses:
+            break
+    assert server.responses[0].corrupt     # served, degraded — not lost
+    assert server.responses[0].accuracy == 0.0
+    assert not server.failed and server.stats["retries"] == 0
+
+
+def test_attempts_exhausted_terminalizes_failed():
+    clk = {"t": 0.0}
+    tel = Telemetry(clock=lambda: clk["t"])
+    server, engines, _ = _server(
+        n=2, clk=clk, steps_per_query=2, max_retries=1,
+        retry_backoff_steps=1, telemetry=tel,
+        breaker_config=BreakerConfig(window=8, min_samples=2,
+                                     failure_threshold=0.5, open_steps=4))
+    for name, eng in list(engines.items()):   # every arm serves garbage
+        server.engines[name] = FaultInjector(
+            eng, [FaultSpec(t_s=0.0, kind="garbage", duration_s=1e9)],
+            clock=server.clock)
+    server.submit(Query(uid=0, text="doomed"))
+    for _ in range(40):
+        server.step()
+        clk["t"] += 0.1
+        if server.failed:
+            break
+    assert server.failed[0].state is RequestState.FAILED
+    assert server.failed[0].attempts == 2     # initial + 1 retry
+    assert server.stats["failed"] == 1
+    assert set(server.responses) | set(server.failed) == {0}
+    text = to_prometheus(tel.registry)
+    assert "greenserv_failed_total 1" in text
+    assert "greenserv_breaker_transitions_total" in text
+
+
+def test_reliability_counters_prebound_export_at_zero():
+    text = to_prometheus(Telemetry().registry)
+    for name in ("greenserv_retries_total", "greenserv_timeouts_total",
+                 "greenserv_failed_total", "greenserv_slo_violations_total",
+                 "greenserv_breaker_transitions_total"):
+        assert f"{name} 0" in text
+
+
+# ---------------------------------------------------------------------------
+# hedge health guard
+# ---------------------------------------------------------------------------
+
+
+def test_hedge_skips_breaker_open_and_stale_heartbeat_targets():
+    server, engines, clk = _server(
+        n=3, steps_per_query=1_000, hedge_after_steps=1,
+        breaker_config=BreakerConfig(window=4, min_samples=1,
+                                     failure_threshold=0.5, open_steps=999))
+    # stale heartbeat: an engine that hasn't stepped for > timeout
+    clk["t"] = 100.0
+    for eng in engines.values():
+        eng._last_step_s = 100.0           # all fresh at t=100
+    req1 = server.submit(Query(uid=0, text="first, occupies the slot"))
+    req2 = server.submit(Query(uid=1, text="second, stuck QUEUED"))
+    # force both onto one arm so uid 1 genuinely queues behind uid 0
+    arm = req1.model_name
+    if req2.model_name != arm:
+        for eng in engines.values():
+            eng.queue = [r for r in eng.queue if r.uid != 1]
+        engines[arm].submit(req2)
+    others = [n for n in engines if n != arm]
+    server.breakers[others[0]].record_failure(0)           # OPEN
+    engines[others[1]]._last_step_s = 0.0                  # stale
+    assert server.breakers[others[0]].state == OPEN
+    assert not server._engine_healthy(others[1], engines[others[1]])
+    server.wait_steps[1] = 5               # straggling well past the bar
+    server.stats["restarts"] = 0
+    server._maybe_hedge()
+    assert server.stats["hedges"] == 0     # nowhere healthy to hedge to
+    # heal the stale engine: it becomes the only eligible target
+    engines[others[1]]._last_step_s = clk["t"]
+    server._maybe_hedge()
+    assert server.stats["hedges"] == 1
+    assert server.hedges[1].model_name == others[1]
+
+
+# ---------------------------------------------------------------------------
+# governor charge hygiene under failure
+# ---------------------------------------------------------------------------
+
+
+def test_governor_cancel_is_idempotent_and_readmission_replaces():
+    gov = EnergyBudgetGovernor(10.0, horizon_queries=100)
+    gov.on_admission(1, predicted=[(7, 0.5)])
+    assert gov.inflight_predicted_wh == pytest.approx(0.5)
+    # retry re-admission REPLACES the uid's charge, never stacks it
+    gov.on_admission(0, predicted=[(7, 0.8)])
+    assert gov.inflight_predicted_wh == pytest.approx(0.8)
+    gov.on_cancel(7)
+    assert gov.inflight_predicted_wh == 0.0
+    assert gov.inflight_pred == {}
+    gov.on_cancel(7)                       # second release: a no-op
+    assert gov.inflight_predicted_wh == 0.0
+    gov.on_cancel(12345)                   # never-predicted uid: a no-op
+    assert gov.inflight_predicted_wh == 0.0
+
+
+def test_timeout_after_retry_releases_predicted_charge_once():
+    from repro.costmodel import EnergyCostModel
+    clk = {"t": 0.0}
+    gov = EnergyBudgetGovernor(10.0, horizon_queries=100)
+    tel = Telemetry(governor=gov, clock=lambda: clk["t"])
+    server, engines, _ = _server(
+        n=2, clk=clk, steps_per_query=10_000, telemetry=tel,
+        cost_model=EnergyCostModel(), deadline_s=2.0, max_retries=2,
+        retry_backoff_steps=1)
+    req = server.submit(Query(uid=0, text="will time out after a retry"))
+    assert 0 in gov.inflight_pred          # admission predicted a charge
+    engines[req.model_name].inject_failure()
+    server.step()                          # crash -> parked retry
+    clk["t"] += 0.1
+    server.step()                          # backoff elapsed -> re-admitted
+    assert server.stats["retries"] == 1
+    assert 0 in gov.inflight_pred          # replaced, still exactly one
+    charge = gov.inflight_predicted_wh
+    assert charge >= 0.0
+    clk["t"] = 5.0                         # blow the end-to-end deadline
+    server.step()
+    assert server.failed[0].state is RequestState.TIMED_OUT
+    assert gov.inflight_pred == {}         # released exactly once
+    assert gov.inflight_predicted_wh == 0.0
+    tel.on_cancelled(0)                    # stray second release: no-op
+    assert gov.inflight_predicted_wh == 0.0
+
+
+# ---------------------------------------------------------------------------
+# livelock diagnostics
+# ---------------------------------------------------------------------------
+
+
+def test_livelock_error_carries_drain_snapshot():
+    server, _, _ = _server(n=2, steps_per_query=10**6,
+                           deadline_s=0.0, max_retries=1,
+                           breaker_config=BreakerConfig())
+    server.submit(Query(uid=0, text="never finishes"))
+    with pytest.raises(LivelockError) as err:
+        server.run_until_drained(max_steps=3)
+    msg = str(err.value)
+    assert "still in flight" in msg
+    assert "retry-parked" in msg           # the reliability ledger
+    assert "sim0" in msg and "breaker" in msg
+
+
+# ---------------------------------------------------------------------------
+# disaggregated pool under repeated kill cycles
+# ---------------------------------------------------------------------------
+
+
+def test_disagg_survives_repeated_prefill_and_twin_kill_cycles():
+    """Kill the prefill engine AND its decode twin in the same window,
+    twice, mid-traffic: every request still completes, hedge bookkeeping
+    is clear, and the governor's in-flight ledger balances to zero."""
+    arch = "granite-3-8b"
+    cfg = get_config(arch, smoke=True, vocab_size=tok.VOCAB_SIZE,
+                     dtype="float32", kv_update="where")
+    eng = ModelEngine(arch, cfg, jax.random.PRNGKey(0), max_batch=2,
+                      max_len=48, prefill_chunk=4)
+    twin = ModelEngine(arch, cfg, jax.random.PRNGKey(0), max_batch=2,
+                      max_len=48, params=eng.params, prefill_chunk=4,
+                      role="decode")
+    gov = EnergyBudgetGovernor(50.0, horizon_queries=100)
+    router = GreenServRouter(RouterConfig(lam=0.4, energy_scale_wh=0.05),
+                             ModelPool([eng.profile]))
+    server = PoolServer(router, {eng.name: eng}, tokenizer=tok.encode,
+                        prefill_chunk=4, decode_engines={eng.name: twin},
+                        telemetry=Telemetry(governor=gov),
+                        hedge_after_steps=2)
+    rng = np.random.default_rng(0)
+    n = 6
+    for i in range(n):
+        server.submit(Query(uid=i, text=f"probe {i} " + "ctx " * int(
+            rng.integers(1, 6)), max_new_tokens=int(rng.integers(2, 5))))
+    kill_at = {4, 12}                      # two full kill cycles
+    for step in range(600):
+        if step in kill_at:
+            eng.inject_failure()
+            twin.inject_failure()
+        server.step()
+        if len(server.responses) == n:
+            break
+    assert set(server.responses) == set(range(n))   # nothing lost
+    assert not server.failed
+    assert server.stats["restarts"] >= 4   # both roles, both cycles
+    assert not server.hedges               # hedge bookkeeping cleared
+    assert gov.inflight_pred == {}         # governor ledger balanced
+    assert gov.inflight_predicted_wh == 0.0

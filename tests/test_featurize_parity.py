@@ -183,6 +183,36 @@ def test_device_respects_feasibility():
         assert d.model_name == "m0"        # only m0 meets the budget
 
 
+def test_breaker_mask_and_blocked_parity_host_vs_device():
+    """The reliability layer's arm-health mask (breaker-OPEN arms) and
+    per-row ``blocked`` vetoes ride the feasibility matrix, so masked
+    routing must stay decision-identical across scoring backends."""
+    r_host, r_dev = _router("host"), _router("device")
+    _warm(r_host), _warm(r_dev)
+    health = np.array([True, False, True, True])     # arm 1 breaker-OPEN
+    r_host.set_arm_health(lambda: health)
+    r_dev.set_arm_health(lambda: health)
+    qs = _queries(WEIRD_TEXTS, uid0=300)
+    blocked = np.zeros((len(qs), 4), bool)
+    blocked[::2, 2] = True                 # retries vetoing their failed arm
+    d_host = r_host.route_batch(_queries(WEIRD_TEXTS, uid0=300),
+                                blocked=blocked)
+    d_dev = r_dev.route_batch(qs, blocked=blocked)
+    assert [d.model_index for d in d_host] == [d.model_index for d in d_dev]
+    assert all(d.model_index != 1 for d in d_host)   # mask actually bites
+    for i, d in enumerate(d_host):
+        if i % 2 == 0:
+            assert d.model_index != 2
+    # all arms of a row vetoed -> fall back to the unmasked feasibility
+    # row (serving must answer), identically on both backends
+    all_blocked = np.ones((2, 4), bool)
+    f_host = r_host.route_batch(_queries(WEIRD_TEXTS[:2], uid0=340),
+                                blocked=all_blocked)
+    f_dev = r_dev.route_batch(_queries(WEIRD_TEXTS[:2], uid0=340),
+                              blocked=all_blocked)
+    assert [d.model_index for d in f_host] == [d.model_index for d in f_dev]
+
+
 def test_device_forwarded_features_match_recompute():
     """Forwarding probe embeddings/labels into route_batch is identical to
     recomputing them (the scheduler's cache-probe reuse)."""

@@ -116,17 +116,24 @@ def test_run_record_schema_is_uniform():
                        trace_every=5)
     rec = run_record(res)
     assert set(rec) == {"mean_accuracy", "total_energy_wh", "wh_per_query",
-                        "completed", "n_queries", "span_s", "avoided_wh",
-                        "stats", "trajectory"}
+                        "completed", "failed", "n_queries", "span_s",
+                        "avoided_wh", "stats", "trajectory"}
     assert rec["completed"] == scenario.n_queries
+    assert rec["failed"] == 0
     traj = rec["trajectory"]
     assert traj, "trajectory must not be empty"
-    keys = {"t_s", "completed", "joules", "inflight", "parked", "deferred",
-            "cache_hits", "lam"}
+    keys = {"t_s", "completed", "failed", "joules", "inflight", "parked",
+            "deferred", "cache_hits", "retries", "timeouts", "breaker_opens",
+            "selections", "lam"}
     assert all(set(p) == keys for p in traj)
     ts = [p["t_s"] for p in traj]
     assert ts == sorted(ts)
     assert traj[-1]["completed"] == scenario.n_queries
+    # per-arm selection counters are cumulative: every completion was
+    # either routed to an engine or answered from cache
+    last = traj[-1]
+    assert sum(last["selections"].values()) + last["cache_hits"] \
+        == scenario.n_queries
 
 
 # -- scenario invariants ------------------------------------------------------
